@@ -1,0 +1,94 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.federation import AggregationService, Trigger
+from repro.data.synthetic_ctr import CTRDataset, make_federated_ctr
+from repro.models import ctr as ctr_lib
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def run_federated_ctr(
+    *,
+    num_devices: int,
+    records_per_device: int = 20,
+    dim: int = 64,
+    rounds: int = 5,
+    local_epochs: int = 10,
+    lr: float = 1e-3,
+    dtype=jnp.float32,
+    seed: int = 0,
+    deviceflow_hook=None,
+    trigger: Trigger | None = None,
+    positive_rate_split=None,
+    eval_data: CTRDataset | None = None,
+) -> dict:
+    """The paper's experiment skeleton: LR-on-CTR federated rounds.
+
+    Returns per-round global accuracy/loss on held-out devices.  The local
+    step runs vectorized over the whole cohort (logical-simulation tier).
+    """
+    data = make_federated_ctr(
+        num_devices=num_devices, records_per_device=records_per_device,
+        dim=dim, seed=seed, positive_rate_split=positive_rate_split)
+    test = eval_data or make_federated_ctr(
+        num_devices=100, records_per_device=records_per_device,
+        dim=dim, seed=seed + 1)
+    local = ctr_lib.make_local_train_fn(lr=lr, epochs=local_epochs)
+    vlocal = jax.jit(jax.vmap(local))
+
+    params = ctr_lib.lr_init(jax.random.PRNGKey(seed), dim)
+    dev_ids = np.arange(num_devices)
+    X, Y, counts = data.stacked_shards(dev_ids, records_per_device)
+    mask = (np.arange(records_per_device)[None] < counts[:, None]).astype(np.float32)
+    Xj, Yj, Mj = jnp.asarray(X), jnp.asarray(Y), jnp.asarray(mask)
+    Xt, Yt = jnp.asarray(test.features), jnp.asarray(test.labels)
+
+    cast = lambda t: jax.tree.map(lambda x: x.astype(dtype), t)
+    history = []
+    for rnd in range(rounds):
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p.astype(dtype), (num_devices,) + p.shape),
+            params)
+        keys = jax.random.split(jax.random.PRNGKey(rnd), num_devices)
+        new_params, metrics = vlocal(
+            stacked, {"x": Xj.astype(dtype), "y": Yj, "mask": Mj}, keys)
+        new_params = jax.tree.map(lambda x: x.astype(jnp.float32), new_params)
+        if deviceflow_hook is not None:
+            params = deviceflow_hook(rnd, new_params, counts, params)
+        else:
+            w = counts.astype(np.float64) / counts.sum()
+            params = jax.tree.map(
+                lambda stack: jnp.einsum("c...,c->...", stack, jnp.asarray(w, stack.dtype)),
+                new_params)
+        acc = float(ctr_lib.accuracy(params, Xt, Yt))
+        loss = float(ctr_lib.bce_loss(params, Xt, Yt))
+        history.append({"round": rnd, "acc": acc, "loss": loss})
+    return {"history": history, "final_acc": history[-1]["acc"],
+            "final_loss": history[-1]["loss"], "params": params}

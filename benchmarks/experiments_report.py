@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.roofline_report import all_cells, improvement_note  # noqa: E402
+
+
+def dryrun_table(art: pathlib.Path, mesh: str) -> str:
+    lines = [
+        "| arch | shape | plan (tp×sp,dup) | compile s | args GB/dev "
+        "| temp GB/dev | AG | AR | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for p in sorted(art.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec["mesh"] != mesh:
+            continue
+        pl = rec["plan"]
+        cc = rec["collective_op_counts"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} "
+            f"| {pl['tp']}×{pl['sp']},{pl['kv_dup']}"
+            f"{',fsdp' if pl.get('fsdp') else ''} "
+            f"| {rec['seconds']['compile']} "
+            f"| {rec['memory']['argument_bytes'] / 1e9:.2f} "
+            f"| {rec['memory']['temp_bytes'] / 1e9:.2f} "
+            f"| {cc['all-gather']} | {cc['all-reduce']} "
+            f"| {cc['reduce-scatter']} | {cc['all-to-all']} "
+            f"| {cc['collective-permute']} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(art: pathlib.Path, mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL/HLO | roofline frac | to move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for cell in all_cells(art):
+        r = cell["rec"]
+        if r["mesh"] != mesh:
+            continue
+        t = cell["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} "
+            f"| {t['memory_s']:.3f} | {t['collective_s']:.3f} "
+            f"| **{cell['dominant']}** | {cell['useful_ratio']:.3f} "
+            f"| {cell['roofline_fraction']:.3f} "
+            f"| {improvement_note(cell['dominant'], r['arch'], r['shape'])} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    art = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")
+    which = sys.argv[2] if len(sys.argv) > 2 else "all"
+    if which in ("all", "dryrun"):
+        print("### single-pod 16x16\n")
+        print(dryrun_table(art, "16x16"))
+        print("\n### multi-pod 2x16x16\n")
+        print(dryrun_table(art, "2x16x16"))
+    if which in ("all", "roofline"):
+        print("\n### roofline (single-pod)\n")
+        print(roofline_table(art, "16x16"))

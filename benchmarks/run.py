@@ -1,0 +1,51 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a trailing roofline summary
+derived from the dry-run artifacts when present).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig9]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.paper_benchmarks import ALL_BENCHMARKS  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in ALL_BENCHMARKS:
+        if args.only and args.only not in bench.__name__:
+            continue
+        try:
+            for row in bench():
+                print(row.csv(), flush=True)
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{bench.__name__},0.0,ERROR={type(e).__name__}:{e}",
+                  flush=True)
+
+    # Roofline summary rows from dry-run artifacts, if present.
+    art = pathlib.Path("artifacts/dryrun")
+    if art.exists():
+        try:
+            from benchmarks.roofline_report import summary_rows
+            for row in summary_rows(art):
+                print(row.csv(), flush=True)
+        except Exception as e:
+            print(f"roofline_summary,0.0,ERROR={type(e).__name__}:{e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

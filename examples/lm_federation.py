@@ -1,0 +1,18 @@
+"""Federated LM training: the cloud model is one of the assigned
+architectures (reduced config); client updates flow through DeviceFlow with
+top-k+error-feedback compression — the LM-scale SimDC loop.
+
+Run:  PYTHONPATH=src python examples/lm_federation.py [--arch llama3_2_3b]
+"""
+import sys
+
+from repro.launch.train import main
+
+sys.exit(main([
+    "--mode", "federated",
+    "--arch", sys.argv[sys.argv.index("--arch") + 1]
+    if "--arch" in sys.argv else "llama3_2_3b",
+    "--rounds", "5", "--clients-per-round", "8",
+    "--traffic", "curve", "--sigma", "1.0",
+    "--compress", "--compress-fraction", "0.05",
+]))

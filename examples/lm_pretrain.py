@@ -1,0 +1,16 @@
+"""Cloud-side LM pretraining driver (smoke scale): a ~10M-param llama-family
+model trained for a few hundred steps with checkpoint/restart — the
+datacenter end of the device-cloud platform.
+
+Run:  PYTHONPATH=src python examples/lm_pretrain.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+steps = sys.argv[sys.argv.index("--steps") + 1] if "--steps" in sys.argv else "200"
+sys.exit(main([
+    "--mode", "cloud", "--arch", "llama3_2_3b", "--smoke",
+    "--steps", steps, "--checkpoint-every", "50",
+    "--checkpoint-dir", "artifacts/ckpt_example", "--log-every", "10",
+]))

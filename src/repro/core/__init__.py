@@ -1,0 +1,47 @@
+"""SimDC core: the paper's contribution as composable JAX modules."""
+from repro.core.allocation import (
+    AllocationResult,
+    GradeRuntime,
+    fixed_ratio_allocation,
+    solve_allocation,
+    solve_allocation_bruteforce,
+)
+from repro.core.deviceflow import Delivery, DeviceFlow, Message, Shelf, VirtualClock
+from repro.core.federation import (
+    AggregationService,
+    ClientCountTrigger,
+    SampleThresholdTrigger,
+    ScheduledTrigger,
+    fedavg_delta,
+    polynomial_staleness,
+    weighted_average,
+)
+from repro.core.scheduler import (
+    ResourceManager,
+    ResourcePool,
+    TaskManager,
+    TaskRunner,
+    TaskScheduler,
+)
+from repro.core.strategies import (
+    AccumulatedStrategy,
+    DispatchPoint,
+    TimeIntervalStrategy,
+    TimePointStrategy,
+    discretize_curve,
+)
+from repro.core.task import GradeSpec, OperatorFlow, Task, TaskQueue, register_operator
+from repro.core.traffic_curves import TrafficCurve, right_tailed_normal, table2_curves
+
+__all__ = [
+    "AllocationResult", "GradeRuntime", "fixed_ratio_allocation",
+    "solve_allocation", "solve_allocation_bruteforce",
+    "Delivery", "DeviceFlow", "Message", "Shelf", "VirtualClock",
+    "AggregationService", "ClientCountTrigger", "SampleThresholdTrigger",
+    "ScheduledTrigger", "fedavg_delta", "polynomial_staleness", "weighted_average",
+    "ResourceManager", "ResourcePool", "TaskManager", "TaskRunner", "TaskScheduler",
+    "AccumulatedStrategy", "DispatchPoint", "TimeIntervalStrategy",
+    "TimePointStrategy", "discretize_curve",
+    "GradeSpec", "OperatorFlow", "Task", "TaskQueue", "register_operator",
+    "TrafficCurve", "right_tailed_normal", "table2_curves",
+]

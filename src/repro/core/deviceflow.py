@@ -1,0 +1,263 @@
+"""DeviceFlow — the device-behavior traffic controller (paper §V).
+
+DeviceFlow sits between the simulated edge tiers and the cloud service.  From
+the edge's viewpoint it is a cloud proxy; from the cloud's viewpoint it *is*
+the device population.  Four modules (paper Fig. 4):
+
+* **Sorter** — receives messages from the compute clusters and routes them to
+  the correct **Shelf** by ``task_id``.
+* **Shelf** — per-task FIFO buffer of pending messages.
+* **Strategy** — stores the user-defined dispatch strategy per task.
+* **Dispatcher** — per-shelf, independent; parses the strategy and emits
+  messages to the downstream cloud service.  Dispatchers of different tasks
+  never interfere.
+
+Everything runs against a *virtual clock* (deterministic event-driven
+simulation), which is the TPU-container adaptation of the paper's wall-clock
+network component: identical ordering semantics, fully reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+from repro.core.strategies import (
+    AccumulatedStrategy,
+    DispatchStrategy,
+    TimeIntervalStrategy,
+    TimePointStrategy,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """One edge→cloud message (model update, metric packet, ...)."""
+
+    task_id: int
+    device_id: int
+    round_idx: int
+    payload: Any
+    created_t: float = 0.0
+    num_samples: int = 1
+    size_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Delivery:
+    """A message delivered to the cloud service at virtual time ``t``."""
+
+    t: float
+    message: Message
+
+
+class Shelf:
+    """FIFO buffer of pending messages for one task."""
+
+    def __init__(self, task_id: int):
+        self.task_id = task_id
+        self._buf: deque[Message] = deque()
+        self.total_received = 0
+        self.total_dispatched = 0
+        self.total_dropped = 0
+
+    def put(self, msg: Message) -> None:
+        self._buf.append(msg)
+        self.total_received += 1
+
+    def take(self, n: int) -> list[Message]:
+        n = min(n, len(self._buf))
+        out = [self._buf.popleft() for _ in range(n)]
+        return out
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    # -- checkpointing hooks (runtime/fault tolerance) ---------------------
+    def state_dict(self) -> dict:
+        return {
+            "task_id": self.task_id,
+            "buf": list(self._buf),
+            "received": self.total_received,
+            "dispatched": self.total_dispatched,
+            "dropped": self.total_dropped,
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "Shelf":
+        s = cls(d["task_id"])
+        s._buf = deque(d["buf"])
+        s.total_received = d["received"]
+        s.total_dispatched = d["dispatched"]
+        s.total_dropped = d["dropped"]
+        return s
+
+
+class Dispatcher:
+    """Per-shelf dispatcher executing one strategy.  Independent per task."""
+
+    def __init__(
+        self,
+        shelf: Shelf,
+        strategy: DispatchStrategy,
+        deliver: Callable[[Delivery], None],
+        *,
+        seed: int = 0,
+    ):
+        self.shelf = shelf
+        self.strategy = strategy
+        self.deliver = deliver
+        self.rng = np.random.default_rng(seed ^ (shelf.task_id * 0x9E3779B9))
+        self._cycle = 0  # accumulated-strategy threshold cursor
+
+    # -- real-time accumulated path ----------------------------------------
+    def on_message(self, t: float) -> None:
+        """Called by the Sorter after every shelf insertion."""
+        if not isinstance(self.strategy, AccumulatedStrategy):
+            return
+        thr = self.strategy.threshold_at(self._cycle)
+        if len(self.shelf) >= thr:
+            batch = self.shelf.take(thr)
+            self._cycle += 1
+            self._send(t, batch, self.strategy.failure_prob, 0)
+
+    # -- rule-based path -----------------------------------------------------
+    def on_round_complete(self, t: float, clock: "VirtualClock") -> None:
+        """Called when a task round completes; schedules rule-based dispatch."""
+        strat = self.strategy
+        if isinstance(strat, TimeIntervalStrategy):
+            strat = strat.discretize(len(self.shelf))
+        if not isinstance(strat, TimePointStrategy):
+            return
+        base = t if strat.relative else 0.0
+        for p in strat.points:
+            clock.schedule(
+                base + p.t,
+                lambda pt=p, bt=base: self._dispatch_point(bt + pt.t, pt),
+            )
+
+    def _dispatch_point(self, t: float, p) -> None:
+        batch = self.shelf.take(p.count)
+        self._send(t, batch, p.failure_prob, p.random_discard)
+
+    def _send(
+        self, t: float, batch: list[Message], failure_prob: float, random_discard: int
+    ) -> None:
+        if random_discard > 0 and batch:
+            k = min(random_discard, len(batch))
+            drop_idx = set(
+                self.rng.choice(len(batch), size=k, replace=False).tolist()
+            )
+            kept = [m for i, m in enumerate(batch) if i not in drop_idx]
+            self.shelf.total_dropped += len(batch) - len(kept)
+            batch = kept
+        for m in batch:
+            if failure_prob > 0.0 and self.rng.random() < failure_prob:
+                self.shelf.total_dropped += 1
+                continue
+            self.shelf.total_dispatched += 1
+            self.deliver(Delivery(t=t, message=m))
+
+
+class VirtualClock:
+    """Deterministic event loop over virtual seconds."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._tie = itertools.count()
+        self.now = 0.0
+
+    def schedule(self, t: float, fn: Callable[[], None]) -> None:
+        if t < self.now - 1e-12:
+            t = self.now
+        heapq.heappush(self._heap, (t, next(self._tie), fn))
+
+    def run_until(self, t_end: float = float("inf")) -> None:
+        while self._heap and self._heap[0][0] <= t_end:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = max(self.now, t)
+            fn()
+        self.now = max(self.now, min(t_end, self.now) if t_end == float("inf") else t_end)
+
+    def pending(self) -> int:
+        return len(self._heap)
+
+
+class DeviceFlow:
+    """Facade wiring Sorter → Shelf → Dispatcher → cloud service."""
+
+    def __init__(
+        self,
+        deliver: Callable[[Delivery], None],
+        *,
+        clock: VirtualClock | None = None,
+        seed: int = 0,
+    ):
+        self.clock = clock or VirtualClock()
+        self._deliver = deliver
+        self._shelves: dict[int, Shelf] = {}
+        self._dispatchers: dict[int, Dispatcher] = {}
+        self._strategies: dict[int, DispatchStrategy] = {}
+        self._seed = seed
+
+    # -- Strategy module ------------------------------------------------------
+    def register_task(self, task_id: int, strategy: DispatchStrategy) -> None:
+        if task_id in self._shelves:
+            raise ValueError(f"task {task_id} already registered with DeviceFlow")
+        shelf = Shelf(task_id)
+        self._shelves[task_id] = shelf
+        self._strategies[task_id] = strategy
+        self._dispatchers[task_id] = Dispatcher(
+            shelf, strategy, self._deliver, seed=self._seed
+        )
+
+    # -- Sorter ----------------------------------------------------------------
+    def submit(self, msg: Message, t: float | None = None) -> None:
+        """Sorter entry point: route by task_id, trigger accumulated dispatch."""
+        t = self.clock.now if t is None else t
+        try:
+            shelf = self._shelves[msg.task_id]
+        except KeyError:
+            raise KeyError(
+                f"message for unregistered task {msg.task_id}"
+            ) from None
+        shelf.put(msg)
+        self._dispatchers[msg.task_id].on_message(t)
+
+    def submit_many(self, msgs: Iterable[Message]) -> None:
+        for m in msgs:
+            self.submit(m)
+
+    # -- round boundaries --------------------------------------------------------
+    def round_complete(self, task_id: int, t: float | None = None) -> None:
+        t = self.clock.now if t is None else t
+        self._dispatchers[task_id].on_round_complete(t, self.clock)
+
+    # -- introspection -------------------------------------------------------------
+    def shelf(self, task_id: int) -> Shelf:
+        return self._shelves[task_id]
+
+    def run(self, t_end: float = float("inf")) -> None:
+        self.clock.run_until(t_end)
+
+    def conservation_ok(self, task_id: int) -> bool:
+        """Invariant: received == dispatched + dropped + still-pending."""
+        s = self._shelves[task_id]
+        return s.total_received == s.total_dispatched + s.total_dropped + len(s)
+
+    # -- checkpointing ----------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {tid: s.state_dict() for tid, s in self._shelves.items()}
+
+    def load_state_dict(self, d: dict) -> None:
+        for tid, sd in d.items():
+            shelf = Shelf.from_state_dict(sd)
+            self._shelves[tid] = shelf
+            if tid in self._strategies:
+                self._dispatchers[tid] = Dispatcher(
+                    shelf, self._strategies[tid], self._deliver, seed=self._seed
+                )

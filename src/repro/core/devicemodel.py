@@ -1,0 +1,192 @@
+"""Calibrated physical-device models (paper §IV.C, Table I).
+
+The paper measures real phones over ADB: current, voltage, CPU%, memory, and
+bandwidth, across five task stages.  No phones exist in this environment, so
+the Device Simulation tier is backed by *calibrated stochastic device models*:
+per-grade stage costs seeded from Table I, with log-normal jitter for
+device-to-device and round-to-round variation.  The interface mirrors what
+PhoneMgr's measurement loop produces, so the rest of the platform (allocation,
+benchmarking-device accounting, GUI-style metric streams) is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterator
+
+import numpy as np
+
+
+class Stage(enum.IntEnum):
+    """Table I stages."""
+
+    NO_APK = 1  # background cleared, APK not running
+    APK_LAUNCH = 2  # APK started, training not begun
+    TRAINING = 3
+    POST_TRAINING = 4  # training done, APK still active
+    APK_CLOSED = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    power_mah: float  # average power consumption over the stage
+    duration_min: float  # average stage duration (minutes)
+    comm_kb: float = 0.0  # communication volume (training stage only)
+
+
+# Table I of the paper, verbatim (High / Low grade, five stages).
+TABLE1: dict[str, dict[Stage, StageCost]] = {
+    "High": {
+        Stage.NO_APK: StageCost(0.24, 0.25),
+        Stage.APK_LAUNCH: StageCost(0.51, 0.25),
+        Stage.TRAINING: StageCost(0.18, 0.27, 33.10),
+        Stage.POST_TRAINING: StageCost(0.37, 0.25),
+        Stage.APK_CLOSED: StageCost(0.44, 0.25),
+    },
+    "Low": {
+        Stage.NO_APK: StageCost(1.71, 0.25),
+        Stage.APK_LAUNCH: StageCost(1.80, 0.25),
+        Stage.TRAINING: StageCost(0.66, 0.36, 33.10),
+        Stage.POST_TRAINING: StageCost(1.65, 0.25),
+        Stage.APK_CLOSED: StageCost(1.82, 0.25),
+    },
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGrade:
+    """A device performance class (paper: High/Low; extensible by model,
+    CPU frequency, NPU support...)."""
+
+    name: str
+    cpu_cores: int
+    memory_gb: float
+    # Relative compute throughput (FLOP/s) used to scale training duration
+    # with model cost; High-grade phones in Table I are ~0.27/0.36 = 0.75x
+    # the Low-grade training time.
+    rel_flops: float = 1.0
+    stage_costs: dict[Stage, StageCost] = dataclasses.field(default_factory=dict)
+
+    def cost(self, stage: Stage) -> StageCost:
+        if stage in self.stage_costs:
+            return self.stage_costs[stage]
+        base = TABLE1["High" if self.rel_flops >= 1.0 else "Low"]
+        return base[stage]
+
+
+HIGH = DeviceGrade("High", cpu_cores=4, memory_gb=12.0, rel_flops=1.0,
+                   stage_costs=TABLE1["High"])
+LOW = DeviceGrade("Low", cpu_cores=1, memory_gb=6.0, rel_flops=0.75,
+                  stage_costs=TABLE1["Low"])
+GRADES = {"High": HIGH, "Low": LOW}
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSample:
+    """One PhoneMgr telemetry sample (paper §IV.C retrieval set)."""
+
+    t: float
+    stage: Stage
+    current_ua: float
+    voltage_mv: float
+    cpu_pct: float
+    mem_kb: float
+    bandwidth_b: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundReport:
+    """Per-round, per-stage outcome for one simulated physical device."""
+
+    device_id: int
+    grade: str
+    round_idx: int
+    stage_power_mah: dict[Stage, float]
+    stage_duration_min: dict[Stage, float]
+    comm_kb: float
+
+    @property
+    def total_duration_min(self) -> float:
+        return sum(self.stage_duration_min.values())
+
+    @property
+    def total_power_mah(self) -> float:
+        return sum(self.stage_power_mah.values())
+
+
+class DeviceModel:
+    """Stochastic emulation of one benchmarking device."""
+
+    def __init__(self, device_id: int, grade: DeviceGrade, *, seed: int = 0,
+                 jitter: float = 0.08):
+        self.device_id = device_id
+        self.grade = grade
+        self.jitter = jitter
+        self.rng = np.random.default_rng(seed ^ (device_id * 0x51ED2705))
+
+    def _noisy(self, mean: float) -> float:
+        if mean == 0.0:
+            return 0.0
+        sigma = math.sqrt(math.log(1.0 + self.jitter**2))
+        return float(mean * self.rng.lognormal(-0.5 * sigma**2, sigma))
+
+    def run_round(self, round_idx: int, *, train_cost_scale: float = 1.0
+                  ) -> RoundReport:
+        """Simulate the five Table-I stages of one training round.
+
+        ``train_cost_scale`` scales the TRAINING stage with the model's
+        computational cost (relative to the paper's LR/Avazu workload).
+        """
+        powers, durs, comm = {}, {}, 0.0
+        for stage in Stage:
+            c = self.grade.cost(stage)
+            scale = train_cost_scale if stage == Stage.TRAINING else 1.0
+            powers[stage] = self._noisy(c.power_mah * scale)
+            durs[stage] = self._noisy(c.duration_min * scale)
+            if stage == Stage.TRAINING:
+                comm = self._noisy(c.comm_kb)
+        return RoundReport(
+            device_id=self.device_id,
+            grade=self.grade.name,
+            round_idx=round_idx,
+            stage_power_mah=powers,
+            stage_duration_min=durs,
+            comm_kb=comm,
+        )
+
+    def telemetry(self, report: RoundReport, hz: float = 1.0) -> Iterator[MetricSample]:
+        """Emit PhoneMgr-style samples over the round (for the metrics DB)."""
+        t = 0.0
+        voltage_mv = 3950.0
+        for stage in Stage:
+            dur_s = report.stage_duration_min[stage] * 60.0
+            n = max(1, int(dur_s * hz))
+            # Convert stage mAh over duration to average current in uA.
+            dur_h = max(report.stage_duration_min[stage] / 60.0, 1e-9)
+            cur_ua = report.stage_power_mah[stage] / dur_h * 1000.0
+            cpu = {Stage.TRAINING: 90.0, Stage.APK_LAUNCH: 35.0}.get(stage, 5.0)
+            mem = 2.2e5 if stage in (Stage.APK_LAUNCH, Stage.TRAINING,
+                                     Stage.POST_TRAINING) else 4.0e4
+            bw = report.comm_kb * 1024.0 / n if stage == Stage.TRAINING else 0.0
+            for i in range(n):
+                yield MetricSample(
+                    t=t + (i + 1) / hz,
+                    stage=stage,
+                    current_ua=self._noisy(cur_ua),
+                    voltage_mv=self._noisy(voltage_mv),
+                    cpu_pct=min(100.0, self._noisy(cpu)),
+                    mem_kb=self._noisy(mem),
+                    bandwidth_b=bw,
+                )
+            t += dur_s
+
+
+def training_duration_s(grade: DeviceGrade, *, train_cost_scale: float = 1.0) -> float:
+    """Deterministic mean round duration (beta_i input to the allocator)."""
+    return grade.cost(Stage.TRAINING).duration_min * 60.0 * train_cost_scale
+
+
+def startup_duration_s(grade: DeviceGrade) -> float:
+    """Mean framework startup time (lambda_i input to the allocator)."""
+    return grade.cost(Stage.APK_LAUNCH).duration_min * 60.0

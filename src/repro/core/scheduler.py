@@ -1,0 +1,203 @@
+"""Task Manager + Resource Manager (paper §III.B).
+
+* ``ResourceManager`` — tracks the hybrid pool (logical bundles per grade and
+  physical phones per grade), supports query/freeze/release and dynamic
+  scale-up/down.
+* ``TaskScheduler`` — greedy: repeatedly admit the highest-benefit task whose
+  demand fits the free pool (benefit = scheduling priority, ties broken by
+  submission order).
+* ``TaskRunner`` — executes a scheduled task: solves the hybrid-allocation ILP
+  (``core.allocation``), splits devices across the tiers, and drives rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable
+
+from repro.core import allocation as alloc
+from repro.core.task import Task, TaskQueue
+
+
+class TaskState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    COMPLETED = "completed"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class ResourcePool:
+    """Free resources per grade: (logical bundles, physical phones)."""
+
+    logical_bundles: dict[str, int]
+    physical_devices: dict[str, int]
+
+    def copy(self) -> "ResourcePool":
+        return ResourcePool(dict(self.logical_bundles), dict(self.physical_devices))
+
+
+class ResourceManager:
+    def __init__(self, pool: ResourcePool):
+        self._total = pool.copy()
+        self._free = pool.copy()
+        self._frozen: dict[int, dict[str, tuple[int, int]]] = {}
+
+    # -- query ---------------------------------------------------------------
+    def free(self) -> ResourcePool:
+        return self._free.copy()
+
+    def fits(self, demand: dict[str, tuple[int, int]]) -> bool:
+        for grade, (bundles, phones) in demand.items():
+            if self._free.logical_bundles.get(grade, 0) < bundles:
+                return False
+            if self._free.physical_devices.get(grade, 0) < phones:
+                return False
+        return True
+
+    # -- freeze / release -------------------------------------------------------
+    def freeze(self, task_id: int, demand: dict[str, tuple[int, int]]) -> None:
+        if not self.fits(demand):
+            raise ValueError(f"demand for task {task_id} does not fit free pool")
+        for grade, (bundles, phones) in demand.items():
+            self._free.logical_bundles[grade] = (
+                self._free.logical_bundles.get(grade, 0) - bundles
+            )
+            self._free.physical_devices[grade] = (
+                self._free.physical_devices.get(grade, 0) - phones
+            )
+        self._frozen[task_id] = dict(demand)
+
+    def release(self, task_id: int) -> None:
+        demand = self._frozen.pop(task_id, None)
+        if demand is None:
+            return
+        for grade, (bundles, phones) in demand.items():
+            self._free.logical_bundles[grade] = (
+                self._free.logical_bundles.get(grade, 0) + bundles
+            )
+            self._free.physical_devices[grade] = (
+                self._free.physical_devices.get(grade, 0) + phones
+            )
+
+    # -- elastic scaling (paper: "dynamic scaling up or down") ------------------
+    def scale(self, grade: str, *, bundles_delta: int = 0, phones_delta: int = 0) -> None:
+        """Add/remove capacity.  Removal never takes frozen resources."""
+        for field, delta in (
+            ("logical_bundles", bundles_delta),
+            ("physical_devices", phones_delta),
+        ):
+            free = getattr(self._free, field)
+            total = getattr(self._total, field)
+            if delta < 0 and free.get(grade, 0) + delta < 0:
+                raise ValueError(
+                    f"cannot remove {-delta} {field} of grade {grade}: "
+                    f"only {free.get(grade, 0)} free"
+                )
+            free[grade] = free.get(grade, 0) + delta
+            total[grade] = total.get(grade, 0) + delta
+
+
+@dataclasses.dataclass
+class ScheduledTask:
+    task: Task
+    allocation: alloc.AllocationResult
+    state: TaskState = TaskState.QUEUED
+
+
+class TaskScheduler:
+    """Greedy scheduler (paper: maximize expected benefit under resources)."""
+
+    def __init__(self, resources: ResourceManager):
+        self.resources = resources
+
+    def select(self, queue: TaskQueue) -> list[Task]:
+        """Admit tasks in priority order while their demand fits."""
+        admitted = []
+        for task in queue.pending():
+            demand = task.demand()
+            if self.resources.fits(demand):
+                self.resources.freeze(task.task_id, demand)
+                queue.remove(task.task_id)
+                admitted.append(task)
+        return admitted
+
+
+class TaskRunner:
+    """Executes admitted tasks against the hybrid tiers.
+
+    ``tier_runners`` maps tier name ("logical"/"device") to a callable
+    ``run(task, grade, num_devices, round_idx) -> list[result]``; the runner
+    stays agnostic of what the tiers compute (operator flows are resolved by
+    the tiers themselves).
+    """
+
+    def __init__(
+        self,
+        resources: ResourceManager,
+        runtimes: Callable[[Task], list[alloc.GradeRuntime]],
+        tier_runners: dict[str, Callable[..., list[Any]]],
+        *,
+        on_round_complete: Callable[[Task, int], None] | None = None,
+    ):
+        self.resources = resources
+        self.runtimes = runtimes
+        self.tier_runners = tier_runners
+        self.on_round_complete = on_round_complete
+        self.records: dict[int, ScheduledTask] = {}
+
+    def run(self, task: Task) -> ScheduledTask:
+        rts = self.runtimes(task)
+        result = alloc.solve_allocation(list(task.grades), rts)
+        rec = ScheduledTask(task=task, allocation=result, state=TaskState.RUNNING)
+        self.records[task.task_id] = rec
+        try:
+            for round_idx in range(task.rounds):
+                for ga in result.per_grade:
+                    if ga.logical_devices:
+                        self.tier_runners["logical"](
+                            task, ga.grade, ga.logical_devices, round_idx
+                        )
+                    if ga.physical_devices:
+                        self.tier_runners["device"](
+                            task, ga.grade, ga.physical_devices, round_idx
+                        )
+                if self.on_round_complete is not None:
+                    self.on_round_complete(task, round_idx)
+            rec.state = TaskState.COMPLETED
+        except Exception:
+            rec.state = TaskState.FAILED
+            raise
+        finally:
+            self.resources.release(task.task_id)
+        return rec
+
+
+class TaskManager:
+    """Facade: queue + scheduler + runner (paper's *Task Manager* service)."""
+
+    def __init__(self, resources: ResourceManager, runner: TaskRunner):
+        self.queue = TaskQueue()
+        self.scheduler = TaskScheduler(resources)
+        self.runner = runner
+
+    def submit(self, task: Task) -> int:
+        return self.queue.submit(task)
+
+    def step(self) -> list[ScheduledTask]:
+        """One scheduling cycle: admit what fits, run to completion."""
+        done = []
+        for task in self.scheduler.select(self.queue):
+            done.append(self.runner.run(task))
+        return done
+
+    def drain(self, max_cycles: int = 1000) -> list[ScheduledTask]:
+        out = []
+        for _ in range(max_cycles):
+            if not len(self.queue):
+                break
+            got = self.step()
+            if not got:  # nothing fits — resources exhausted for now
+                break
+            out.extend(got)
+        return out

@@ -1,0 +1,265 @@
+"""Logical & Device simulation tiers (paper §III.B, §IV.A).
+
+*Logical Simulation* in the paper launches Ray actors on k8s nodes, each actor
+sequentially simulating several devices.  The TPU-native adaptation is a
+**vectorized client engine**: client-local training is expressed as a pure
+function of (client params, client batch) and executed for a whole *cohort* of
+clients at once via ``jax.vmap`` — sharded over the mesh ``data`` axis with
+``shard_map`` when a mesh is supplied.  One TPU step simulates hundreds of
+devices; cohorts iterate to reach arbitrary population sizes (the paper's
+"each actor sequentially simulates multiple devices").
+
+*Device Simulation* is backed by the calibrated device models of
+``core.devicemodel`` (see DESIGN.md §2 for why physical phones cannot exist
+here) and — crucially for the Fig. 6 reproduction — executes the *same
+operator flow through a numerically different backend* (bf16 accumulation vs
+f32), mirroring the paper's PyMNN-vs-C++-MNN operator discrepancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.devicemodel import DeviceGrade, DeviceModel, RoundReport
+
+Params = Any
+Batch = Any
+
+# A client-local training function: (params, batch, rng) -> (params, metrics).
+LocalTrainFn = Callable[[Params, Batch, jax.Array], tuple[Params, dict]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortResult:
+    """Results of one cohort of simultaneously simulated clients."""
+
+    params: Params  # stacked: leaf shape (cohort, ...)
+    metrics: dict  # stacked metrics, e.g. loss per client
+    num_samples: jax.Array  # (cohort,)
+
+
+def _stack_params(params: Params, n: int) -> Params:
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), params)
+
+
+class LogicalTier:
+    """Vectorized logical-simulation tier."""
+
+    def __init__(
+        self,
+        local_train: LocalTrainFn,
+        *,
+        mesh: jax.sharding.Mesh | None = None,
+        data_axis: str = "data",
+        cohort_size: int = 64,
+        dtype: Any = jnp.float32,
+    ):
+        self.local_train = local_train
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.cohort_size = cohort_size
+        self.dtype = dtype
+        self._compiled = None
+
+    def _build(self):
+        vmapped = jax.vmap(self.local_train, in_axes=(0, 0, 0))
+        if self.mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            from jax.experimental.shard_map import shard_map
+
+            spec = P(self.data_axis)
+            vmapped = shard_map(
+                vmapped,
+                mesh=self.mesh,
+                in_specs=(spec, spec, spec),
+                out_specs=(spec, spec),
+                check_rep=False,
+            )
+        return jax.jit(vmapped)
+
+    def run_cohort(
+        self,
+        global_params: Params,
+        batches: Batch,  # leaves shaped (cohort, ...)
+        rng: jax.Array,
+        num_samples: np.ndarray,
+    ) -> CohortResult:
+        if self._compiled is None:
+            self._compiled = self._build()
+        n = int(jax.tree.leaves(batches)[0].shape[0])
+        cast = lambda x: x.astype(self.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+        stacked = jax.tree.map(cast, _stack_params(global_params, n))
+        rngs = jax.random.split(rng, n)
+        params, metrics = self._compiled(stacked, batches, rngs)
+        return CohortResult(
+            params=params, metrics=metrics, num_samples=jnp.asarray(num_samples)
+        )
+
+
+class DeviceTier:
+    """Calibrated device-simulation tier.
+
+    Runs the same local computation (optionally through a numerically distinct
+    backend dtype to reproduce the paper's operator discrepancy) and charges
+    virtual time/energy via ``DeviceModel``.
+    """
+
+    def __init__(
+        self,
+        local_train: LocalTrainFn,
+        grade: DeviceGrade,
+        *,
+        dtype: Any = jnp.bfloat16,
+        seed: int = 0,
+        train_cost_scale: float = 1.0,
+    ):
+        self.grade = grade
+        self.dtype = dtype
+        self.seed = seed
+        self.train_cost_scale = train_cost_scale
+        self.local_train = local_train
+        self._jit = jax.jit(local_train)
+        self.reports: list[RoundReport] = []
+
+    def run_device(
+        self,
+        device_id: int,
+        global_params: Params,
+        batch: Batch,
+        rng: jax.Array,
+        round_idx: int,
+        *,
+        benchmark: bool = False,
+    ) -> tuple[Params, dict, RoundReport | None]:
+        # Numerically-distinct backend: cast to device dtype, compute, cast back.
+        cast_in = lambda x: (
+            x.astype(self.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+        )
+        p = jax.tree.map(cast_in, global_params)
+        b = jax.tree.map(cast_in, batch)
+        new_p, metrics = self._jit(p, b, rng)
+        new_p = jax.tree.map(
+            lambda x, ref: x.astype(ref.dtype)
+            if jnp.issubdtype(ref.dtype, jnp.floating)
+            else x,
+            new_p,
+            global_params,
+        )
+        report = None
+        if benchmark:
+            model = DeviceModel(device_id, self.grade, seed=self.seed)
+            report = model.run_round(round_idx, train_cost_scale=self.train_cost_scale)
+            self.reports.append(report)
+        return new_p, metrics, report
+
+
+@dataclasses.dataclass
+class FederatedRoundOutcome:
+    num_logical: int
+    num_physical: int
+    messages: list[Message]
+    reports: list[RoundReport]
+
+
+class HybridSimulation:
+    """Drives one federated round across both tiers and feeds DeviceFlow.
+
+    This is the composition point of the paper: allocation decides the split,
+    both tiers execute the same operator flow, results become DeviceFlow
+    messages whose *dispatch* to the cloud follows the task's traffic strategy.
+    """
+
+    def __init__(
+        self,
+        logical: LogicalTier,
+        device: DeviceTier,
+        deviceflow: DeviceFlow | None = None,
+    ):
+        self.logical = logical
+        self.device = device
+        self.deviceflow = deviceflow
+
+    def run_round(
+        self,
+        task_id: int,
+        round_idx: int,
+        global_params: Params,
+        client_batches: Batch,  # leaves (num_clients, ...)
+        num_samples: np.ndarray,  # (num_clients,)
+        num_logical: int,
+        rng: jax.Array,
+        *,
+        benchmark_devices: int = 0,
+        arrival_times: np.ndarray | None = None,
+    ) -> FederatedRoundOutcome:
+        n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
+        if not 0 <= num_logical <= n_total:
+            raise ValueError("num_logical out of range")
+        take = lambda tree, sl: jax.tree.map(lambda x: x[sl], tree)
+        msgs: list[Message] = []
+        reports: list[RoundReport] = []
+
+        # Logical tier: one vectorized cohort (chunked by cohort_size).
+        idx = 0
+        while idx < num_logical:
+            hi = min(idx + self.logical.cohort_size, num_logical)
+            rng, sub = jax.random.split(rng)
+            res = self.logical.run_cohort(
+                global_params,
+                take(client_batches, slice(idx, hi)),
+                sub,
+                num_samples[idx:hi],
+            )
+            host_params = jax.device_get(res.params)
+            for j in range(hi - idx):
+                msgs.append(
+                    Message(
+                        task_id=task_id,
+                        device_id=idx + j,
+                        round_idx=round_idx,
+                        payload=jax.tree.map(lambda x: x[j], host_params),
+                        num_samples=int(num_samples[idx + j]),
+                    )
+                )
+            idx = hi
+
+        # Device tier: per-device execution with calibrated models.
+        for j in range(num_logical, n_total):
+            rng, sub = jax.random.split(rng)
+            new_p, _, rep = self.device.run_device(
+                j,
+                global_params,
+                take(client_batches, j),
+                sub,
+                round_idx,
+                benchmark=(j - num_logical) < benchmark_devices,
+            )
+            if rep is not None:
+                reports.append(rep)
+            msgs.append(
+                Message(
+                    task_id=task_id,
+                    device_id=j,
+                    round_idx=round_idx,
+                    payload=jax.device_get(new_p),
+                    num_samples=int(num_samples[j]),
+                )
+            )
+
+        if self.deviceflow is not None:
+            for i, m in enumerate(msgs):
+                t = None if arrival_times is None else float(arrival_times[i])
+                self.deviceflow.submit(m, t=t)
+            self.deviceflow.round_complete(task_id)
+        return FederatedRoundOutcome(
+            num_logical=num_logical,
+            num_physical=n_total - num_logical,
+            messages=msgs,
+            reports=reports,
+        )

@@ -1,0 +1,3 @@
+from repro.data.synthetic_ctr import CTRDataset, make_federated_ctr
+from repro.data.partition import dirichlet_partition, iid_partition, label_skew_partition
+from repro.data.tokens import TokenPipeline, synthetic_token_batches

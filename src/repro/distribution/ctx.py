@@ -1,0 +1,52 @@
+"""Sharding context: models call ``constrain(x, role)``; the distribution
+layer installs a role→PartitionSpec map.  Outside a context every call is a
+no-op, so model code runs unmodified on a single device.
+
+Roles:
+  act_btd    — residual-stream activations (batch, seq, d_model)
+  act_q      — query tensor (batch, seq, heads, head_dim)
+  act_kv     — key/value tensors (batch, seq, kv_heads, head_dim)
+  logits     — (batch, seq, padded_vocab)
+  ssm_inner  — mamba inner activations (batch, seq, d_inner)
+  ssm_bc     — mamba B/C projections (batch, seq, 2*g*n)
+  moe_impl   — callable override for the MoE block (expert-parallel shard_map)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable
+
+import jax
+
+_CTX: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def sharding_context(rules: dict[str, Any]):
+    token = _CTX.set(rules)
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x: jax.Array, role: str) -> jax.Array:
+    rules = _CTX.get()
+    if not rules:
+        return x
+    spec = rules.get(role)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_impl() -> Callable | None:
+    rules = _CTX.get()
+    return rules.get("moe_impl") if rules else None
+
+
+def active() -> bool:
+    return _CTX.get() is not None

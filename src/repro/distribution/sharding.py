@@ -1,0 +1,289 @@
+"""Sharding rules: params / activations / caches → PartitionSpec trees.
+
+The physical production mesh is ``(pod?, data=16, model=16)``.  Per
+architecture we *derive* a logical mesh by reshaping the same device array to
+``(pod?, data, tp, sp)`` with ``tp*sp = model`` (DESIGN.md §4) — the hardware
+topology is untouched; only the axis naming is refined.
+
+Placement summary (train):
+  weights      — ``tp`` on heads/d_ff/experts/vocab + FSDP (``data``) on the
+                 other matrix dim; biases/norms replicated.
+  activations  — batch on ``(pod, data)``, sequence on ``sp``.
+  KV caches    — batch on ``data``, sequence on ``sp``, kv-heads on ``tp``
+                 (replicated over ``tp`` when kv_dup > 1).
+  optimizer    — same specs as the (FSDP-sharded) parameters.
+Serving drops FSDP (params replicated over ``data``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MeshPlan, ModelConfig
+
+DP_AXES = ("pod", "data")  # batch axes when present in the mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalMesh:
+    mesh: Mesh
+    plan: MeshPlan
+    has_pod: bool
+
+    @property
+    def dp(self):  # batch axes
+        return ("pod", "data") if self.has_pod else ("data",)
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+
+def derive_logical_mesh(production_mesh: Mesh, plan: MeshPlan) -> LogicalMesh:
+    """Reshape (pod?, data, model) devices into (pod?, data, tp, sp)."""
+    devs = production_mesh.devices
+    has_pod = "pod" in production_mesh.axis_names
+    model = devs.shape[-1]
+    if plan.tp * plan.sp != model:
+        raise ValueError(f"tp*sp={plan.tp * plan.sp} != model axis {model}")
+    new_shape = devs.shape[:-1] + (plan.tp, plan.sp)
+    names = (("pod",) if has_pod else ()) + ("data", "tp", "sp")
+    mesh = Mesh(devs.reshape(new_shape), names)
+    return LogicalMesh(mesh=mesh, plan=plan, has_pod=has_pod)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs by path rules
+# --------------------------------------------------------------------------- #
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec_for(
+    path: str, shape: tuple[int, ...], cfg: ModelConfig, plan: MeshPlan,
+    *, train: bool,
+) -> P:
+    """Rule table mapping a parameter path+shape to a PartitionSpec.
+
+    Leading stacked-layer dims (from scan-layers) are detected by rank vs the
+    rule's expected rank and left unsharded.
+    """
+    fsdp = "data" if (train and plan.fsdp) else None
+    tp = "tp" if plan.tp > 1 else None
+    sp = "sp" if plan.sp > 1 else None
+    kv_shardable = (cfg.num_kv_heads % plan.tp == 0) if plan.tp > 1 else False
+
+    def with_stack(rule: tuple, base_rank: int) -> P:
+        extra = len(shape) - base_rank
+        return P(*(([None] * extra) + list(rule)))
+
+    leaf = path.rsplit("/", 1)[-1]
+    # ---- embedding / unembedding ----
+    # NOTE §Perf iteration 4a tried FSDP-sharding the vocab rows during
+    # training (to reduce-scatter the embedding gradient); GSPMD answered
+    # with full-table gathers instead — REFUTED, reverted (see EXPERIMENTS).
+    if leaf == "embedding":
+        return P(None, tp)  # rows local-gather, features tp-sharded
+    if leaf == "lm_head":
+        return P(fsdp, tp)  # vocab tp-sharded => logits stay vocab-sharded
+    # ---- attention ----
+    if leaf in ("wq", "wqkv"):
+        return with_stack((fsdp, tp), 2)
+    if leaf in ("wk", "wv"):
+        return with_stack((fsdp, tp if kv_shardable else None), 2)
+    if leaf == "wo":
+        return with_stack((tp, fsdp), 2)
+    if leaf in ("bq", "bqkv"):
+        return with_stack((tp,), 1)
+    if leaf in ("bk", "bv"):
+        return with_stack((tp if kv_shardable else None,), 1)
+    # ---- dense MLP ----
+    if leaf in ("w_gate", "w_up", "w_gate_up") and "moe" not in path:
+        return with_stack((fsdp, tp), 2)
+    if leaf == "w_down" and "moe" not in path:
+        return with_stack((tp, fsdp), 2)
+    # ---- MoE (experts on tp = ep axis; FSDP on d_model; router replicated
+    #      so every (data, sp) cell routes its own tokens without a gather;
+    #      F is NOT sp-sharded — sp ranks hold disjoint tokens, so an sp psum
+    #      of F-partial outputs would mix different tokens' results) ----
+    if "moe" in path:
+        if leaf == "router":
+            return with_stack((None, None), 2)
+        if leaf in ("w_gate", "w_up"):
+            return with_stack((tp, fsdp, None), 3)
+        if leaf == "w_down":
+            return with_stack((tp, None, fsdp), 3)
+    # ---- Mamba2 ----
+    if leaf in ("in_z", "in_x"):
+        return with_stack((fsdp, tp), 2)
+    if leaf == "in_BC":
+        bc_shardable = (cfg.ssm_groups % plan.tp == 0) if plan.tp > 1 else False
+        return with_stack((fsdp, tp if bc_shardable else None), 2)
+    if leaf == "in_dt":
+        return with_stack((fsdp, tp), 2)
+    if leaf == "conv_x_w":
+        return with_stack((None, tp), 2)
+    if leaf in ("conv_x_b", "norm_w"):
+        return with_stack((tp,), 1)
+    if leaf in ("conv_BC_w",):
+        return with_stack((None, None), 2)
+    if leaf in ("conv_BC_b",):
+        return with_stack((None,), 1)
+    if leaf in ("A_log", "dt_bias", "D_skip"):
+        return with_stack(("tp" if (plan.tp > 1 and shape[-1] % plan.tp == 0) else None,), 1)
+    if leaf == "out_proj":
+        return with_stack((tp, fsdp), 2)
+    # ---- norms, biases, scalars ----
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(
+    params_shape: Any, cfg: ModelConfig, lmesh: LogicalMesh, *, train: bool
+) -> Any:
+    """Pytree of NamedShardings matching a params (shape) tree."""
+
+    def rule(path, leaf):
+        spec = param_spec_for(
+            _path_str(path), leaf.shape, cfg, lmesh.plan, train=train
+        )
+        return NamedSharding(lmesh.mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# --------------------------------------------------------------------------- #
+# Activation / cache / batch specs
+# --------------------------------------------------------------------------- #
+def activation_rules(cfg: ModelConfig, lmesh: LogicalMesh,
+                     *, kind: str, batch_shardable: bool = True
+                     ) -> dict[str, NamedSharding]:
+    """Role → sharding map consumed by the models' ``constrain`` hooks.
+
+    ``batch_shardable=False`` (e.g. long_500k's global_batch=1): the batch
+    stays unsharded and decode caches shard their *sequence* over the
+    otherwise-idle ``data`` axis.
+    """
+    dp = lmesh.dp if batch_shardable else None
+    plan = lmesh.plan
+    tp = "tp" if plan.tp > 1 else None
+    sp = "sp" if plan.sp > 1 else None
+    kv_tp = tp if (plan.tp > 1 and cfg.num_kv_heads % plan.tp == 0) else None
+    sh = lmesh.sharding
+    # NOTE §Perf iteration 4b tried Megatron-style sequence-parallel norms
+    # (residual seq sharded over (sp, tp)); under scan+remat GSPMD added
+    # reshard collectives instead of folding the TP psum — all-reduce bytes
+    # DOUBLED.  REFUTED, reverted (see EXPERIMENTS §Perf).
+    rules = {
+        "act_btd": sh(dp, sp, None),
+        "act_q": sh(dp, sp, tp, None),
+        # KV sequence-replicated: GSPMD inserts the sp all-gather (context
+        # parallelism); kv-heads tp-sharded when divisible, else replicated.
+        "act_kv": sh(dp, None, kv_tp, None),
+        "logits": sh(dp, sp, tp),
+        "ssm_inner": sh(dp, None, tp),
+        "ssm_bc": sh(dp, None, None),
+    }
+    if kind == "decode":
+        # Cache layout: (batch, seq, kv, hd).  The sequence takes every axis
+        # the other dims cannot use: sp always; tp when kv-heads are not
+        # tp-shardable (kv-dup archs — otherwise the cache would be
+        # *replicated* 16x over tp: 88 GB/dev on nemotron, §Perf); data when
+        # the batch cannot shard (long_500k b=1).
+        seq_axes = []
+        if not batch_shardable:
+            seq_axes += list(lmesh.dp)
+        if kv_tp is None and tp:
+            seq_axes.append(tp)
+        if sp:
+            seq_axes.append(sp)
+        cache_seq = tuple(seq_axes) if seq_axes else None
+        rules["cache_kv"] = sh(dp, cache_seq, kv_tp, None)
+        rules["act_btd"] = sh(dp, None, None)
+        rules["act_q"] = sh(dp, None, tp, None)
+        rules["logits"] = sh(dp, None, tp)
+    return rules
+
+
+def batch_shardings(cfg: ModelConfig, lmesh: LogicalMesh, *, kind: str,
+                    batch_shardable: bool = True) -> dict:
+    dp = lmesh.dp if batch_shardable else None
+    sp = "sp" if lmesh.plan.sp > 1 else None
+    sh = lmesh.sharding
+    if kind == "train":
+        # leaves carry a leading microbatch dim: (n_micro, mb, seq)
+        out = {
+            "tokens": sh(None, dp, sp),
+            "targets": sh(None, dp, sp),
+            "mask": sh(None, dp, sp),
+        }
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = sh(None, dp, None, None)
+        if cfg.family == "audio":
+            out["src_embeds"] = sh(None, dp, sp, None)
+        return out
+    if kind == "prefill":
+        out = {"tokens": sh(dp, sp)}
+        if cfg.family == "vlm":
+            out["prefix_embeds"] = sh(dp, None, None)
+        if cfg.family == "audio":
+            out["src_embeds"] = sh(dp, sp, None)
+        return out
+    if kind == "decode":
+        return {"token": sh(dp)}
+    raise ValueError(kind)
+
+
+def cache_shardings(cfg: ModelConfig, lmesh: LogicalMesh, cache_shape: Any,
+                    *, batch_shardable: bool = True) -> Any:
+    """Shardings for a KV/SSM cache (shape) tree."""
+    plan = lmesh.plan
+    dp = lmesh.dp if batch_shardable else None
+    tp = "tp" if plan.tp > 1 else None
+    sp = "sp" if plan.sp > 1 else None
+    kv_tp_c = tp if (plan.tp > 1 and cfg.num_kv_heads % plan.tp == 0) else None
+    seq_axes = []
+    if not batch_shardable:
+        seq_axes += list(lmesh.dp)
+    if kv_tp_c is None and tp:
+        seq_axes.append(tp)
+    if sp:
+        seq_axes.append(sp)
+    cache_seq = tuple(seq_axes) if seq_axes else None
+    kv_tp = tp if (plan.tp > 1 and cfg.num_kv_heads % plan.tp == 0) else None
+    ssm_h_tp = tp if (plan.tp > 1 and cfg.family in ("ssm", "hybrid")
+                      and cfg.ssm_heads % plan.tp == 0) else None
+    sh = lmesh.sharding
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        leaf_name = ps.rsplit("/", 1)[-1]
+        rank = len(leaf.shape)
+        base = {
+            "k": (dp, cache_seq, kv_tp, None),
+            "v": (dp, cache_seq, kv_tp, None),
+            "xk": (dp, None, kv_tp, None),
+            "xv": (dp, None, kv_tp, None),
+            "pos": (),
+            "conv_x": (dp, None, tp),
+            "conv_BC": (dp, None, None),
+            "ssm": (dp, ssm_h_tp, None, None),
+        }.get(leaf_name)
+        if base is None:
+            return sh(*([None] * rank))
+        extra = rank - len(base)  # stacked-layer leading dims
+        return sh(*(([None] * extra) + list(base)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

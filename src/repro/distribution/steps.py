@@ -1,0 +1,238 @@
+"""Distributed train/serve step builders.
+
+``build_train_step`` — gradient-accumulation scan over microbatches, per-layer
+remat, AdamW with FSDP-sharded f32 state, donated buffers.
+
+``build_serve_step``  — one-token batched decode against sharded caches
+(sequence over ``sp``, kv-heads over ``tp``, batch over ``data``); the
+softmax-over-sharded-cache lowers to the flash-decoding psum combine.
+
+``build_prefill_step`` — full-sequence forward populating the caches.
+
+All builders return ``(fn, in_shardings, out_shardings, input_specs)`` so the
+dry-run can ``jax.jit(fn, ...).lower(*input_specs).compile()`` without ever
+materializing full-scale arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, padded_vocab
+from repro.distribution import sharding as shlib
+from repro.distribution.ctx import sharding_context
+from repro.distribution.moe_parallel import make_moe_sharded
+from repro.distribution.sharding import LogicalMesh
+from repro.models.registry import get_model
+from repro.optim.optimizers import AdamWConfig, adamw_init, adamw_update
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _eval_params_shape(cfg: ModelConfig) -> Any:
+    api = get_model(cfg)
+    return jax.eval_shape(lambda k: api.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def _dp_size(lmesh: LogicalMesh) -> int:
+    sizes = dict(zip(lmesh.mesh.axis_names, lmesh.mesh.devices.shape))
+    out = sizes.get("data", 1)
+    if lmesh.has_pod:
+        out *= sizes.get("pod", 1)
+    return out
+
+
+def _rules(cfg: ModelConfig, lmesh: LogicalMesh, kind: str, train: bool,
+           batch_shardable: bool = True) -> dict:
+    rules = shlib.activation_rules(cfg, lmesh, kind=kind,
+                                   batch_shardable=batch_shardable)
+    if cfg.num_experts:
+        rules["moe_impl"] = make_moe_sharded(
+            cfg, lmesh, train=train, seq_sharded=(kind != "decode"),
+            batch_shardable=batch_shardable)
+    return rules
+
+
+# --------------------------------------------------------------------------- #
+# Training
+# --------------------------------------------------------------------------- #
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    n, mb = shape.microbatches, shape.global_batch // shape.microbatches
+    s = shape.seq_len
+    batch = {
+        "tokens": SDS((n, mb, s), jnp.int32),
+        "targets": SDS((n, mb, s), jnp.int32),
+        "mask": SDS((n, mb, s), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        # Patch embeddings replace the first frontend_tokens text positions.
+        batch["tokens"] = SDS((n, mb, s - cfg.frontend_tokens), jnp.int32)
+        batch["targets"] = SDS((n, mb, s - cfg.frontend_tokens), jnp.int32)
+        batch["mask"] = SDS((n, mb, s - cfg.frontend_tokens), jnp.float32)
+        batch["prefix_embeds"] = SDS(
+            (n, mb, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["src_embeds"] = SDS((n, mb, s, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    lmesh: LogicalMesh,
+    shape: ShapeConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+):
+    api = get_model(cfg)
+    rules = _rules(cfg, lmesh, "train", True)
+    pshape_early = _eval_params_shape(cfg)
+    grad_shardings = shlib.param_shardings(pshape_early, cfg, lmesh, train=True)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+
+        with sharding_context(rules):
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    api.loss_fn, has_aux=True)(params, mb, cfg)
+                # Keep per-microbatch grads on the FSDP/TP param shards: the
+                # backward then emits per-layer reduce-scatters instead of a
+                # full-gradient all-reduce (§Perf iteration 1: measured
+                # 122 GB/dev of all-reduce on llama3.2-3b train_4k baseline).
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, grad_shardings)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32), s),
+                params, grad_shardings)
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, 0.0), batch)
+            n = shape.microbatches
+            grads = jax.tree.map(lambda g: g / n, grads)
+            new_params, opt_state, om = adamw_update(
+                opt_cfg, grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": opt_state}
+        return new_state, {"loss": loss_sum / n, **om}
+
+    # Shardings.
+    pshape = _eval_params_shape(cfg)
+    pshard = shlib.param_shardings(pshape, cfg, lmesh, train=True)
+    oshape = jax.eval_shape(adamw_init, pshape)
+    oshard = {
+        "master": pshard, "m": pshard, "v": pshard,
+        "step": NamedSharding(lmesh.mesh, P()),
+    }
+    state_shard = {"params": pshard, "opt": oshard}
+    bspec = train_batch_specs(cfg, shape)
+    bshard = {k: v for k, v in shlib.batch_shardings(
+        cfg, lmesh, kind="train").items() if k in bspec}
+
+    state_shape = {"params": pshape, "opt": oshape}
+    metrics_shard = None  # let jit choose (scalars)
+    return train_step, (state_shard, bshard), (state_shard, metrics_shard), (
+        state_shape, bspec)
+
+
+# --------------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------------- #
+def serve_cache_shape(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    api = get_model(cfg)
+    b = shape.global_batch
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: api.init_cache(cfg, b, shape.seq_len, shape.seq_len))
+    return jax.eval_shape(lambda: api.init_cache(cfg, b, shape.seq_len))
+
+
+def _serve_weight_fsdp(cfg: ModelConfig, lmesh: LogicalMesh) -> bool:
+    """ZeRO-inference: when tp-only weights exceed the HBM budget (16 GB
+    v5e minus cache/temp headroom), shard serve weights over ``data`` too —
+    GSPMD inserts per-layer weight all-gathers (phi3-medium at tp=2: 14.7 GB
+    replicated -> 0.9 GB sharded)."""
+    per_dev = 2.0 * cfg.num_params() / max(lmesh.plan.tp, 1)
+    return per_dev > 12e9
+
+
+def build_serve_step(cfg: ModelConfig, lmesh: LogicalMesh, shape: ShapeConfig):
+    """One-token decode step: (params, caches, token) -> (logits, caches)."""
+    api = get_model(cfg)
+    bs = shape.global_batch % _dp_size(lmesh) == 0
+    rules = _rules(cfg, lmesh, "decode", False, batch_shardable=bs)
+
+    def serve_step(params, caches, token):
+        with sharding_context(rules):
+            logits, caches = api.decode_step(params, token, cfg, caches)
+        return logits, caches
+
+    pshape = _eval_params_shape(cfg)
+    pshard = shlib.param_shardings(
+        pshape, cfg, lmesh, train=_serve_weight_fsdp(cfg, lmesh))
+    cshape = serve_cache_shape(cfg, shape)
+    cshard = shlib.cache_shardings(cfg, lmesh, cshape, batch_shardable=bs)
+    tshard = shlib.batch_shardings(cfg, lmesh, kind="decode",
+                                   batch_shardable=bs)["token"]
+    logit_shard = NamedSharding(
+        lmesh.mesh, P(lmesh.dp if bs else None,
+                      "tp" if lmesh.plan.tp > 1 else None))
+    token_spec = SDS((shape.global_batch,), jnp.int32)
+    return serve_step, (pshard, cshard, tshard), (logit_shard, cshard), (
+        pshape, cshape, token_spec)
+
+
+def build_prefill_step(cfg: ModelConfig, lmesh: LogicalMesh, shape: ShapeConfig):
+    """Full-sequence prefill: (params, inputs...) -> (last logits, caches)."""
+    api = get_model(cfg)
+    rules = _rules(cfg, lmesh, "prefill", False)
+    b, s = shape.global_batch, shape.seq_len
+
+    if cfg.family == "audio":
+        def prefill_step(params, src_embeds, tokens):
+            with sharding_context(rules):
+                return api.prefill(params, src_embeds, tokens, cfg, s)
+        inputs = (SDS((b, s, cfg.d_model), jnp.bfloat16),
+                  SDS((b, s), jnp.int32))
+        bsh = shlib.batch_shardings(cfg, lmesh, kind="prefill")
+        in_batch_shard = (bsh["src_embeds"], bsh["tokens"])
+    elif cfg.family == "vlm":
+        def prefill_step(params, tokens, prefix_embeds):
+            with sharding_context(rules):
+                return api.prefill(params, tokens, cfg, s,
+                                   prefix_embeds=prefix_embeds)
+        inputs = (SDS((b, s - cfg.frontend_tokens), jnp.int32),
+                  SDS((b, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16))
+        bsh = shlib.batch_shardings(cfg, lmesh, kind="prefill")
+        in_batch_shard = (bsh["tokens"], bsh["prefix_embeds"])
+    else:
+        def prefill_step(params, tokens):
+            with sharding_context(rules):
+                return api.prefill(params, tokens, cfg, s)
+        inputs = (SDS((b, s), jnp.int32),)
+        in_batch_shard = (shlib.batch_shardings(cfg, lmesh, kind="prefill")["tokens"],)
+
+    pshape = _eval_params_shape(cfg)
+    pshard = shlib.param_shardings(
+        pshape, cfg, lmesh, train=_serve_weight_fsdp(cfg, lmesh))
+    logit_shard = NamedSharding(
+        lmesh.mesh, P(lmesh.dp, "tp" if lmesh.plan.tp > 1 else None))
+    # Output caches: shard like serve caches.
+    out_shape = jax.eval_shape(prefill_step, pshape, *inputs)
+    cshard = shlib.cache_shardings(cfg, lmesh, out_shape[1])
+    return prefill_step, (pshard,) + in_batch_shard, (logit_shard, cshard), (
+        pshape,) + inputs
+
+
+def init_train_state(cfg: ModelConfig, seed: int = 0) -> dict:
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    return {"params": params, "opt": adamw_init(params)}

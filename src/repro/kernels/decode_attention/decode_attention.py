@@ -1,0 +1,119 @@
+"""Pallas TPU flash-decoding kernel: one query token vs a long KV cache.
+
+Decode is memory-bound: the entire KV cache must stream HBM→VMEM once per
+step, and the MXU work per block is tiny.  The TPU adaptation therefore
+optimizes for *streaming*:
+
+* grid ``(batch, kv_heads, num_kv_blocks)`` — KV blocks innermost so the
+  (m, l, acc) online-softmax state for all ``g = h/kv`` grouped query heads
+  rides in VMEM scratch across the stream;
+* all ``g`` query heads of a KV group are processed together as the rows of a
+  single ``(g, d) x (d, block_k)`` MXU op, amortizing each streamed KV block
+  over the whole group (the GPU flash-decoding equivalent splits over SMs and
+  combines in a second pass — on TPU the sequential grid does the combine for
+  free within a core, while the *cross-shard* combine for a sequence-sharded
+  cache is a 3-scalar psum handled in ``distribution.steps``);
+* variable cache lengths are masked in-kernel from a per-batch ``lengths``
+  input so padded cache tail blocks contribute exactly zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, nk: int, block_k: int, scale: float,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0]  # (g, d)
+        k = k_ref[0, :, 0, :]  # (block_k, d)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            (q * scale).astype(q.dtype), k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (g, block_k)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,  # (b, h, d)
+    k_cache: jax.Array,  # (b, s, kv, d)
+    v_cache: jax.Array,  # (b, s, kv, d)
+    lengths: jax.Array,  # (b,) int32
+    *,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    assert h % kvh == 0
+    g = h // kvh
+    scale = (d ** -0.5) if scale is None else scale
+    block_k = min(block_k, s)
+    nk = -(-s // block_k)
+    s_p = nk * block_k
+    if s_p != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+    qg = q.reshape(b, kvh, g, d)
+
+    kernel = functools.partial(
+        _decode_kernel, nk=nk, block_k=block_k, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, ki: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, d)

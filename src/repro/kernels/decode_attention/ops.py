@@ -1,0 +1,52 @@
+"""Public entry point for decode attention (single-token, KV cache)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention.ref import (
+    combine_partials,
+    decode_attention_partial,
+    decode_attention_ref,
+)
+
+__all__ = [
+    "decode_attention",
+    "decode_attention_partial",
+    "combine_partials",
+    "decode_attention_ref",
+]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "impl"))
+def decode_attention(
+    q: jax.Array,  # (b, h, d)
+    k_cache: jax.Array,  # (b, s, kv, d)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (b,)
+    *,
+    scale: float | None = None,
+    block_k: int = 512,
+    impl: str = "auto",
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths, scale=scale, block_k=block_k,
+            interpret=not _on_tpu(),
+        )
+    if impl == "pallas_interpret":
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths, scale=scale, block_k=block_k,
+            interpret=True,
+        )
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, lengths, scale=scale)
+    raise ValueError(f"unknown impl {impl!r}")

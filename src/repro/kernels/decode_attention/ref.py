@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (b, h, d) — one new token per sequence
+    k_cache: jax.Array,  # (b, s, kv, d)
+    v_cache: jax.Array,  # (b, s, kv, d)
+    lengths: jax.Array,  # (b,) int32 — valid cache entries per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = (d ** -0.5) if scale is None else scale
+    return _decode_scoped(q, k_cache, v_cache, lengths, scale, b, kv, g, d)
+
+
+def _decode_scoped(q, k_cache, v_cache, lengths, scale, b, kv, g, d):
+    """Kernel-region scope: executes as the Pallas flash-decoding kernel on
+    TPU (scores in VMEM; HBM traffic = one cache stream + q/o)."""
+    import jax
+    with jax.named_scope("pallas_kernel_region"):
+        return _decode_impl(q, k_cache, v_cache, lengths, scale, b, kv, g, d)
+
+
+def _decode_impl(q, k_cache, v_cache, lengths, scale, b, kv, g, d):
+    # Keep the cache in its storage dtype; accumulate in f32 on the MXU —
+    # casting the cache to f32 would triple decode HBM traffic (§Perf).
+    qg = (q.reshape(b, kv, g, d) * scale).astype(q.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    mask = jnp.arange(k_cache.shape[1])[None] < lengths[:, None]  # (b, s)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, kv * g, d).astype(q.dtype)
+
+
+def decode_attention_partial(
+    q: jax.Array,  # (b, h, d)
+    k_cache: jax.Array,  # (b, s_shard, kv, d) — one *shard* of the cache
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (b,) valid entries in THIS shard
+    *,
+    scale: float | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-decoding partial results for cross-shard combination.
+
+    Returns ``(o_partial, m, l)`` where the final output across shards is
+    ``sum_i o_i * exp(m_i - m) * l_i / sum_i exp(m_i - m) * l_i`` — the
+    sequence-parallel decode combine used by ``distribution.steps`` (psum over
+    the ``sp`` axis).  o_partial is the *unnormalized-but-locally-normalized*
+    softmax output of this shard.
+    """
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    mask = jnp.arange(k_cache.shape[1])[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = s.max(axis=-1)  # (b, kv, g)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return (
+        o.reshape(b, h, d),
+        m.reshape(b, h),
+        l.reshape(b, h),
+    )
+
+
+def combine_partials(
+    os: jax.Array,  # (n_shards, b, h, d)
+    ms: jax.Array,  # (n_shards, b, h)
+    ls: jax.Array,  # (n_shards, b, h)
+    out_dtype=None,
+) -> jax.Array:
+    m = ms.max(axis=0)  # (b, h)
+    w = jnp.exp(ms - m[None])  # (n, b, h)
+    l = (ls * w).sum(axis=0)
+    o = (os * w[..., None]).sum(axis=0)
+    out = o / jnp.maximum(l, 1e-37)[..., None]
+    return out.astype(out_dtype or os.dtype)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU adaptation of the Mamba2 "state-space duality" algorithm (the CUDA
+original splits work across thread blocks with a separate state-passing pass;
+Triton kernels recompute decays per block):
+
+* grid ``(batch, heads, num_chunks)`` — chunks innermost and *sequential*,
+  so the running state ``S (P x N)`` lives in f32 VMEM scratch across chunk
+  steps: the inter-chunk recurrence costs zero extra HBM traffic (the GPU
+  version round-trips chunk states through global memory);
+* the intra-chunk quadratic part is three MXU matmuls —
+  ``C @ B^T (Q x Q)``, ``M @ X (Q x P)``, state injection ``C @ S^T`` — all
+  on 64/128-aligned tiles;
+* decays are computed in f32 on the VPU from a single in-chunk cumsum; the
+  ``exp(L_t - L_s)`` matrix is built once per chunk in VMEM.
+
+VMEM per step (Q=chunk, P=headdim, N=state): inputs ``Q*(P+2N+1)*4`` +
+scratch ``P*N*4`` + transient ``Q*Q*4`` ≈ 0.25 MB at Q=128, P=64, N=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref, s_scr,
+    *, nc: int, q: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    xc = x_ref[0, :, 0, :].astype(jnp.float32)  # (q, p)
+    dtc = dt_ref[0, :, 0].astype(jnp.float32)  # (q,)
+    A = a_ref[0]  # scalar (this head's decay rate)
+    Bc = b_ref[0, :, 0, :].astype(jnp.float32)  # (q, n)
+    Cc = c_ref[0, :, 0, :].astype(jnp.float32)  # (q, n)
+
+    alog = dtc * A
+    L = jnp.cumsum(alog)  # (q,) inclusive
+    # Intra-chunk quadratic part.
+    CB = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, q) = C_t . B_s
+    decay = jnp.exp(L[:, None] - L[None, :])
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    M = jnp.where(tpos >= spos, CB * decay, 0.0) * dtc[None, :]
+    y = jax.lax.dot_general(
+        M, xc, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, p)
+    # Inter-chunk contribution from the carried state.
+    S = s_scr[...]  # (p, n)
+    y += jnp.exp(L)[:, None] * jax.lax.dot_general(
+        Cc, S, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, n) . (p, n)^T -> (q, p)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # State update.
+    Lq = L[-1]
+    w = jnp.exp(Lq - L) * dtc  # (q,)
+    s_scr[...] = jnp.exp(Lq) * S + jax.lax.dot_general(
+        xc * w[:, None], Bc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (p, n)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        sfin_ref[0, 0] = s_scr[...]
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (b, l, h, p)
+    dt: jax.Array,  # (b, l, h)
+    A: jax.Array,  # (h,)
+    B: jax.Array,  # (b, l, g, n)
+    C: jax.Array,  # (b, l, g, n)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert h % g == 0
+    rep = h // g
+    assert l % chunk == 0, "length must be a multiple of the chunk size"
+    nc = l // chunk
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, q=chunk)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,), memory_space=pltpu.SMEM),
+            pl.BlockSpec(
+                (1, chunk, 1, n), lambda bi, hi, ci, rep=rep: (bi, ci, hi // rep, 0)
+            ),
+            pl.BlockSpec(
+                (1, chunk, 1, n), lambda bi, hi, ci, rep=rep: (bi, ci, hi // rep, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C)
+    return y, s_fin

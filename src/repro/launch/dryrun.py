@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent (no mismatched
+specs, no unsupported collectives), (b) the program fits memory
+(``memory_analysis``), and (c) yields the cost/collective numbers the
+roofline analysis (EXPERIMENTS.md §Roofline) reads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, choose_mesh_plan
+from repro.configs.registry import get_config, lm_arch_ids
+from repro.distribution.sharding import derive_logical_mesh
+from repro.distribution.steps import (
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+from repro.launch.mesh import make_production_mesh
+
+SKIPPED_LONG = {
+    # long_500k requires a sub-quadratic path; these are pure full-attention
+    # (see DESIGN.md §6).
+    "phi3_medium_14b", "llama3_2_3b", "qwen2_7b", "nemotron_4_15b",
+    "granite_moe_3b_a800m", "phi3_5_moe_42b_a6_6b", "internvl2_26b",
+    "seamless_m4t_medium",
+}
+
+
+def cell_supported(arch: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch in SKIPPED_LONG:
+        return False, "pure full-attention arch at 524k context (DESIGN.md §6)"
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: pathlib.Path, step_override=None) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    if step_override:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **step_override)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = choose_mesh_plan(cfg, model_axis=mesh.devices.shape[-1])
+    lmesh = derive_logical_mesh(mesh, plan)
+
+    if shape.kind == "train":
+        fn, in_sh, out_sh, in_specs = build_train_step(cfg, lmesh, shape)
+        donate = (0,)  # train state updated in place
+    elif shape.kind == "prefill":
+        fn, in_sh, out_sh, in_specs = build_prefill_step(cfg, lmesh, shape)
+        donate = ()
+    else:
+        fn, in_sh, out_sh, in_specs = build_serve_step(cfg, lmesh, shape)
+        donate = (1,)  # KV/SSM caches updated in place
+
+    with lmesh.mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        t1 = time.time()
+        lowered = jitted.lower(*in_specs)
+        t_lower = time.time() - t1
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "plan": {"tp": plan.tp, "sp": plan.sp, "kv_dup": plan.kv_dup,
+                 "fsdp": plan.fsdp and shape.kind == "train"},
+        "ok": True,
+        "seconds": {"lower": round(t_lower, 1), "compile": round(t_compile, 1),
+                    "total": round(time.time() - t0, 1)},
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collective_op_counts": {
+            k: hlo.count(f" {k}(") + hlo.count(f" {k}-start(")
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute")
+        },
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{rec['mesh'].replace('x', '_')}"
+    (out_dir / f"{stem}.json").write_text(json.dumps(rec, indent=1))
+    # HLO text is large; store compressed for the roofline analyzer.
+    import gzip
+    with gzip.open(out_dir / f"{stem}.hlo.txt.gz", "wt") as f:
+        f.write(hlo)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+    out_dir = pathlib.Path(args.out)
+
+    cells: list[tuple[str, str]] = []
+    archs = lm_arch_ids() if (args.all or not args.arch) else (args.arch,)
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        a_norm = a.replace("-", "_").replace(".", "_")
+        from repro.configs.registry import ALIASES
+        a_norm = ALIASES.get(a, a_norm).replace("-", "_").replace(".", "_")
+        for s in shapes:
+            cells.append((a_norm, s))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape_name in cells:
+        ok, why = cell_supported(arch, shape_name)
+        if not ok:
+            print(f"SKIP  {arch} x {shape_name}: {why}", flush=True)
+            continue
+        for mp in meshes:
+            tag = f"{arch} x {shape_name} x {'2x16x16' if mp else '16x16'}"
+            try:
+                rec = run_cell(arch, shape_name, multi_pod=mp, out_dir=out_dir)
+                print(
+                    f"PASS  {tag}  compile={rec['seconds']['compile']}s "
+                    f"flops/dev={rec['cost_analysis']['flops']:.3e} "
+                    f"temp/dev={rec['memory']['temp_bytes'] / 1e9:.2f}GB",
+                    flush=True,
+                )
+            except Exception as e:
+                failures += 1
+                print(f"FAIL  {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

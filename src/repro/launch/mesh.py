@@ -1,0 +1,21 @@
+"""Production mesh definition.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: 16x16 = 256 chips; multi-pod: 2 pods x 256 =
+512 chips with a leading ``pod`` axis (data parallelism over DCI).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (possibly fake) local devices exist —
+    used by distributed *tests*, never by the dry-run."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,207 @@
+"""Federated LM training driver — SimDC end-to-end on the LM substrate.
+
+The cloud model is one of the assigned architectures; simulated device cohorts
+produce update messages that flow through **DeviceFlow** under a configurable
+traffic strategy; the **aggregation trigger** (sample-threshold or scheduled)
+gates the global update; the cloud-side trainer runs distributed
+``train_step``s with checkpoint/restart.
+
+Two modes:
+  --mode cloud      pure datacenter pretraining loop (no federation) — the
+                    substrate driver used by examples/lm_pretrain.py.
+  --mode federated  full SimDC loop (default).
+
+At container scale use ``--smoke`` (reduced configs, CPU-sized cohorts); on a
+real cluster the same flags ride on the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeConfig, choose_mesh_plan
+from repro.configs.registry import get_config
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.federation import (
+    AggregationService,
+    SampleThresholdTrigger,
+    ScheduledTrigger,
+)
+from repro.core.strategies import AccumulatedStrategy, TimeIntervalStrategy
+from repro.core.traffic_curves import right_tailed_normal
+from repro.data.tokens import TokenPipeline
+from repro.distribution.sharding import derive_logical_mesh
+from repro.distribution.steps import build_train_step, init_train_state
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import get_model
+from repro.optim.compression import topk_compress, topk_init
+from repro.runtime.fault_tolerance import TrainingSupervisor
+
+
+def make_small_shape(cfg, *, seq_len=128, global_batch=8, microbatches=2):
+    return ShapeConfig("local", seq_len, global_batch, "train",
+                       microbatches=microbatches)
+
+
+def cloud_training(args) -> dict:
+    """Datacenter pretraining loop with checkpoint/restart."""
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        shape = make_small_shape(cfg)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+    else:
+        shape = SHAPES[args.shape]
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    plan = choose_mesh_plan(cfg, model_axis=mesh.devices.shape[-1])
+    lmesh = derive_logical_mesh(mesh, plan)
+    step_fn, in_sh, out_sh, _ = build_train_step(cfg, lmesh, shape)
+
+    with lmesh.mesh:
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0,))
+        state = init_train_state(cfg, seed=args.seed)
+        pipe = TokenPipeline(cfg.vocab_size, shape.seq_len,
+                             shape.global_batch, seed=args.seed)
+        ckpt = Checkpointer(args.checkpoint_dir)
+        losses = []
+
+        def one_step(state, step):
+            b = next(pipe)
+            n, mb = shape.microbatches, shape.global_batch // shape.microbatches
+            batch = {
+                "tokens": b.tokens.reshape(n, mb, -1),
+                "targets": b.targets.reshape(n, mb, -1),
+                "mask": b.mask.reshape(n, mb, -1),
+            }
+            state, metrics = jitted(state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"lr {float(metrics['lr']):.2e}", flush=True)
+            return state
+
+        sup = TrainingSupervisor(ckpt, checkpoint_every=args.checkpoint_every)
+        state, _ = sup.run(state, one_step, args.steps,
+                           extra_fn=lambda: {"pipeline": pipe.state_dict()})
+    return {"final_loss": losses[-1] if losses else None, "losses": losses}
+
+
+def federated_training(args) -> dict:
+    """SimDC federated loop: clients -> DeviceFlow -> trigger -> FedAvg."""
+    cfg = get_config(args.arch, smoke=True)  # clients train the reduced model
+    api = get_model(cfg)
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    global_params = api.init(key, cfg)
+
+    trigger = (
+        SampleThresholdTrigger(args.sample_threshold)
+        if args.trigger == "samples"
+        else ScheduledTrigger(args.trigger_period)
+    )
+    svc = AggregationService(global_params, trigger=trigger)
+    flow = DeviceFlow(svc, seed=args.seed)
+    task_id = 0
+    if args.traffic == "realtime":
+        flow.register_task(task_id, AccumulatedStrategy(
+            thresholds=(1,), failure_prob=args.dropout))
+    else:
+        flow.register_task(task_id, TimeIntervalStrategy(
+            curve=right_tailed_normal(args.sigma), interval=args.round_seconds,
+            failure_prob=args.dropout))
+
+    losses = []
+    comp_state = None
+    seq = 64
+    for rnd in range(args.rounds):
+        # Each round: a cohort of clients runs local training on private
+        # token shards (vectorized: one vmap over the cohort).
+        def local_train(params, batch, _rng):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss_fn(p, batch, cfg)[0])(params)
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - args.client_lr * g.astype(jnp.float32)
+                              ).astype(p.dtype), params, grads)
+            return new, loss
+
+        cohort = args.clients_per_round
+        toks = rng.integers(
+            1, cfg.vocab_size, size=(cohort, seq + 1)).astype(np.int32)
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+            "mask": jnp.ones((cohort, seq), jnp.float32),
+        }
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cohort,) + x.shape),
+            svc.global_params)
+        keys = jax.random.split(jax.random.PRNGKey(rnd), cohort)
+        new_params, loss = jax.vmap(local_train)(
+            stacked, jax.tree.map(lambda x: x[:, None], batch), keys)
+        losses.append(float(loss.mean()))
+
+        host = jax.device_get(new_params)
+        for c in range(cohort):
+            payload = jax.tree.map(lambda x: x[c], host)
+            if args.compress:
+                if comp_state is None:
+                    comp_state = topk_init(payload)
+                payload, comp_state, stats = topk_compress(
+                    payload, comp_state, fraction=args.compress_fraction)
+            flow.submit(Message(
+                task_id=task_id, device_id=c, round_idx=rnd,
+                payload=payload, num_samples=seq,
+            ))
+        flow.round_complete(task_id)
+        flow.run(flow.clock.now + args.round_seconds)
+        svc.tick(flow.clock.now)
+        print(f"round {rnd:3d} client-loss {losses[-1]:.4f} "
+              f"aggregations {len(svc.history)} "
+              f"shelf {len(flow.shelf(task_id))}", flush=True)
+    return {"losses": losses, "aggregations": len(svc.history)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_3b")
+    ap.add_argument("--mode", choices=("cloud", "federated"), default="federated")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--clients-per-round", type=int, default=8)
+    ap.add_argument("--client-lr", type=float, default=0.05)
+    ap.add_argument("--trigger", choices=("samples", "scheduled"),
+                    default="samples")
+    ap.add_argument("--sample-threshold", type=int, default=256)
+    ap.add_argument("--trigger-period", type=float, default=30.0)
+    ap.add_argument("--traffic", choices=("realtime", "curve"),
+                    default="realtime")
+    ap.add_argument("--sigma", type=float, default=1.0)
+    ap.add_argument("--round-seconds", type=float, default=60.0)
+    ap.add_argument("--dropout", type=float, default=0.0)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--compress-fraction", type=float, default=0.01)
+    ap.add_argument("--checkpoint-dir", default="artifacts/ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.mode == "cloud":
+        out = cloud_training(args)
+    else:
+        out = federated_training(args)
+    print("DONE", {k: v for k, v in out.items() if k != "losses"})
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""CTR models for the paper's federated experiments (§VI.A.1).
+
+Logistic regression on hashed features — the paper's benchmark model for
+device-cloud CTR prediction — plus the client-local SGD step used by both
+simulation tiers.  A tiny MLP variant is included for heavier-client
+ablations.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def lr_init(key, dim: int, dtype=jnp.float32) -> Params:
+    return {
+        "w": jnp.zeros((dim,), dtype),
+        "b": jnp.zeros((), dtype),
+    }
+
+
+def lr_logits(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def bce_loss(params: Params, x: jax.Array, y: jax.Array,
+             mask: jax.Array | None = None) -> jax.Array:
+    logits = lr_logits(params, x).astype(jnp.float32)
+    per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    if mask is None:
+        return per.mean()
+    return (per * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def accuracy(params: Params, x: jax.Array, y: jax.Array,
+             mask: jax.Array | None = None) -> jax.Array:
+    pred = (lr_logits(params, x) > 0).astype(jnp.float32)
+    correct = (pred == y).astype(jnp.float32)
+    if mask is None:
+        return correct.mean()
+    return (correct * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_local_train_fn(*, lr: float = 1e-3, epochs: int = 10):
+    """Client-local SGD: the paper's per-device training operator.
+
+    Returns ``f(params, batch, rng) -> (params, metrics)``; ``batch`` is
+    ``{"x": (n, dim), "y": (n,), "mask": (n,)}`` (mask handles per-device
+    padding in the vectorized cohort layout).
+    """
+
+    def local_train(params: Params, batch: dict, rng: jax.Array):
+        def epoch_step(p, _):
+            g = jax.grad(bce_loss)(p, batch["x"], batch["y"], batch.get("mask"))
+            p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+
+        params, _ = jax.lax.scan(epoch_step, params, None, length=epochs)
+        metrics = {
+            "loss": bce_loss(params, batch["x"], batch["y"], batch.get("mask")),
+            "acc": accuracy(params, batch["x"], batch["y"], batch.get("mask")),
+        }
+        return params, metrics
+
+    return local_train
+
+
+def mlp_init(key, dim: int, hidden: int = 64, dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden), dtype) * (2.0 / dim) ** 0.5,
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": jax.random.normal(k2, (hidden,), dtype) * (2.0 / hidden) ** 0.5,
+        "b2": jnp.zeros((), dtype),
+    }
+
+
+def mlp_logits(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]

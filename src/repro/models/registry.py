@@ -1,0 +1,58 @@
+"""Family → (init, loss_fn, serving fns) dispatch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, mamba2, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    loss_fn: Callable
+    apply: Callable | None = None
+    init_cache: Callable | None = None
+    prefill: Callable | None = None
+    decode_step: Callable | None = None
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return ModelApi(
+            init=transformer.init,
+            loss_fn=transformer.loss_fn,
+            apply=transformer.apply,
+            init_cache=transformer.init_cache,
+            prefill=transformer.prefill,
+            decode_step=transformer.decode_step,
+        )
+    if cfg.family == "ssm":
+        return ModelApi(
+            init=mamba2.init,
+            loss_fn=mamba2.loss_fn,
+            apply=mamba2.apply,
+            init_cache=mamba2.init_cache,
+            prefill=mamba2.prefill,
+            decode_step=mamba2.decode_step,
+        )
+    if cfg.family == "hybrid":
+        return ModelApi(
+            init=hybrid.init,
+            loss_fn=hybrid.loss_fn,
+            apply=hybrid.apply,
+            init_cache=hybrid.init_cache,
+            prefill=hybrid.prefill,
+            decode_step=hybrid.decode_step,
+        )
+    if cfg.family == "audio":
+        return ModelApi(
+            init=encdec.init,
+            loss_fn=encdec.loss_fn,
+            apply=None,
+            init_cache=encdec.init_cache,
+            prefill=encdec.prefill,
+            decode_step=encdec.decode_step,
+        )
+    raise ValueError(f"unknown family {cfg.family}")

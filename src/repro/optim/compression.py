@@ -1,0 +1,84 @@
+"""Gradient/update compression for the federated client→cloud path.
+
+The paper's DeviceFlow moves whole model updates; at LM scale the update
+payload dominates edge bandwidth.  We provide the two standard distributed-
+optimization tricks, both with exact round-trip APIs so DeviceFlow messages
+can carry compressed payloads:
+
+* **top-k sparsification with error feedback** — keep the k largest-magnitude
+  entries per tensor; the residual is fed back into the next round's update
+  (memory of the compressor keeps convergence);
+* **int8 quantization** — symmetric per-tensor scaling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKState:
+    residual: Params  # error-feedback memory
+
+
+def topk_init(params: Params) -> TopKState:
+    return TopKState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def topk_compress(
+    update: Params, state: TopKState, *, fraction: float = 0.01
+) -> tuple[Params, TopKState, dict]:
+    """Returns (sparse update (dense layout, zeros elsewhere), state, stats)."""
+
+    def one(u, r):
+        uf = u.astype(jnp.float32) + r
+        flat = uf.reshape(-1)
+        k = max(1, int(flat.size * fraction))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(uf) >= thresh
+        kept = jnp.where(mask, uf, 0.0)
+        return kept.astype(u.dtype), (uf - kept)
+
+    pairs = jax.tree.map(one, update, state.residual)
+    kept = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    nz = sum(int(jnp.count_nonzero(x)) for x in jax.tree.leaves(kept))
+    total = sum(x.size for x in jax.tree.leaves(kept))
+    return kept, TopKState(residual=resid), {
+        "nonzero": nz, "total": total,
+        "compression_ratio": total / max(nz, 1),
+    }
+
+
+def int8_quantize(update: Params) -> tuple[Params, Params]:
+    """Returns (int8 tree, per-tensor scales)."""
+
+    def one(u):
+        uf = u.astype(jnp.float32)
+        scale = jnp.maximum(jnp.abs(uf).max(), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(uf / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    pairs = jax.tree.map(one, update)
+    q = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return q, s
+
+
+def int8_dequantize(q: Params, scales: Params, like: Params) -> Params:
+    return jax.tree.map(
+        lambda qq, ss, p: (qq.astype(jnp.float32) * ss).astype(p.dtype),
+        q, scales, like,
+    )
+
+
+def payload_bytes(tree: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run on the real single CPU device (the dry-run sets its own 512-device
+# flag in a separate process; never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,116 @@
+"""Hybrid allocation ILP (paper Eq. 1): exactness, invariants, properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import (
+    GradeRuntime,
+    fixed_ratio_allocation,
+    solve_allocation,
+    solve_allocation_bruteforce,
+)
+from repro.core.task import GradeSpec
+
+
+def mk(N, q=0, f=10, k=2, m=3):
+    return GradeSpec("g", N, benchmarking_devices=q, logical_bundles=f,
+                     bundles_per_device=k, physical_devices=m)
+
+
+def test_all_logical_when_no_phones():
+    spec = GradeSpec("g", 10, logical_bundles=10, bundles_per_device=1,
+                     physical_devices=0)
+    rt = GradeRuntime(alpha=2.0, beta=1.0, lam=1.0)
+    res = solve_allocation([spec], [rt])
+    assert res.per_grade[0].logical_devices == 10
+    assert res.makespan == pytest.approx(2.0)  # ceil(10/10)*2
+
+
+def test_all_physical_when_no_bundles():
+    spec = GradeSpec("g", 9, logical_bundles=0, physical_devices=3)
+    rt = GradeRuntime(alpha=2.0, beta=1.0, lam=0.5)
+    res = solve_allocation([spec], [rt])
+    assert res.per_grade[0].physical_devices == 9
+    assert res.makespan == pytest.approx(math.ceil(9 / 3) * 1.0 + 0.5)
+
+
+def test_infeasible_raises():
+    spec = GradeSpec("g", 5, logical_bundles=0, physical_devices=0)
+    rt = GradeRuntime(alpha=1.0, beta=1.0, lam=0.0)
+    with pytest.raises(ValueError):
+        solve_allocation([spec], [rt])
+
+
+def test_benchmarking_devices_excluded():
+    spec = mk(10, q=4)
+    rt = GradeRuntime(alpha=1.0, beta=1.0, lam=0.0)
+    res = solve_allocation([spec], [rt])
+    g = res.per_grade[0]
+    assert g.logical_devices + g.physical_devices == 6
+
+
+grade_strategy = st.builds(
+    lambda N, q, f, k, m: GradeSpec(
+        "g", N, benchmarking_devices=min(q, N), logical_bundles=f,
+        bundles_per_device=k, physical_devices=m),
+    N=st.integers(0, 40), q=st.integers(0, 5), f=st.integers(1, 30),
+    k=st.integers(1, 6), m=st.integers(1, 8),
+)
+runtime_strategy = st.builds(
+    GradeRuntime,
+    alpha=st.floats(0.1, 50, allow_nan=False),
+    beta=st.floats(0.1, 50, allow_nan=False),
+    lam=st.floats(0, 20, allow_nan=False),
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.tuples(grade_strategy, runtime_strategy),
+                min_size=1, max_size=3))
+def test_solver_matches_bruteforce(pairs):
+    specs = [
+        GradeSpec(f"g{i}", s.num_devices, s.benchmarking_devices,
+                  s.logical_bundles, s.bundles_per_device, s.physical_devices)
+        for i, (s, _) in enumerate(pairs)
+    ]
+    rts = [r for _, r in pairs]
+    a = solve_allocation(specs, rts)
+    b = solve_allocation_bruteforce(specs, rts)
+    assert a.makespan == pytest.approx(b.makespan)
+    assert a.total_logical == b.total_logical  # secondary objective too
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(grade_strategy, runtime_strategy),
+                min_size=1, max_size=3),
+       st.sampled_from([0.0, 0.25, 0.5, 0.75, 1.0]))
+def test_optimal_never_worse_than_fixed_ratio(pairs, frac):
+    """Paper Fig. 7 claim as a property."""
+    specs = [
+        GradeSpec(f"g{i}", s.num_devices, s.benchmarking_devices,
+                  s.logical_bundles, s.bundles_per_device, s.physical_devices)
+        for i, (s, _) in enumerate(pairs)
+    ]
+    rts = [r for _, r in pairs]
+    opt = solve_allocation(specs, rts)
+    fixed = fixed_ratio_allocation(specs, rts, frac)
+    assert opt.makespan <= fixed.makespan + 1e-9
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(grade_strategy, runtime_strategy),
+                min_size=1, max_size=3))
+def test_allocation_conserves_devices(pairs):
+    specs = [
+        GradeSpec(f"g{i}", s.num_devices, s.benchmarking_devices,
+                  s.logical_bundles, s.bundles_per_device, s.physical_devices)
+        for i, (s, _) in enumerate(pairs)
+    ]
+    rts = [r for _, r in pairs]
+    res = solve_allocation(specs, rts)
+    for spec, g in zip(specs, res.per_grade):
+        n = spec.num_devices - spec.benchmarking_devices
+        assert g.logical_devices + g.physical_devices == n
+        assert 0 <= g.logical_devices <= n
+        assert max(g.logical_time, g.physical_time) <= res.makespan + 1e-9

@@ -1,0 +1,107 @@
+"""Checkpoint/restart, fault-tolerance supervisor, elastic rescale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.allocation import GradeRuntime
+from repro.core.scheduler import ResourceManager, ResourcePool
+from repro.core.task import GradeSpec
+from repro.runtime.fault_tolerance import (
+    ElasticController,
+    RetryPolicy,
+    StragglerPolicy,
+    TrainingSupervisor,
+    with_retries,
+)
+
+
+def state_tree(x=0.0):
+    return {"params": {"w": jnp.full((4, 4), x), "b": jnp.zeros(3)},
+            "step": jnp.asarray(int(x), jnp.int32)}
+
+
+def test_checkpoint_roundtrip_bitexact(tmp_path):
+    ck = Checkpointer(tmp_path)
+    t = state_tree(3.5)
+    ck.save(7, t, extra={"note": "hello"})
+    restored, extra = ck.restore(state_tree())
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert extra == {"note": "hello"}
+    assert ck.latest_step() == 7
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, state_tree(float(s)))
+    ck.wait()
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, state_tree(1.0))
+    # Simulate a crash mid-save: a step dir without manifest.
+    (tmp_path / "step_0000000009").mkdir()
+    assert ck.latest_step() == 1
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    ck = Checkpointer(tmp_path)
+    crashed = {"done": False}
+
+    def step_fn(state, step):
+        if step == 5 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+        return {"params": state["params"],
+                "step": state["step"] + 1}
+
+    sup = TrainingSupervisor(ck, checkpoint_every=2,
+                             policy=RetryPolicy(backoff_s=0.01))
+    state, step = sup.run(state_tree(0.0), step_fn, 8,
+                          state_like=state_tree())
+    assert step == 8
+    assert int(state["step"]) == 8  # replayed steps after restore
+    assert crashed["done"]
+
+
+def test_with_retries_gives_up():
+    calls = {"n": 0}
+
+    def bad():
+        calls["n"] += 1
+        raise RuntimeError("nope")
+
+    f = with_retries(bad, RetryPolicy(max_attempts=3, backoff_s=0.0))
+    with pytest.raises(RuntimeError):
+        f()
+    assert calls["n"] == 3
+
+
+def test_straggler_policy():
+    p = StragglerPolicy(target=100, over_select=0.3, deadline_s=60.0)
+    assert p.num_selected == 130
+    assert not p.round_complete(arrived=99, elapsed_s=10)
+    assert p.round_complete(arrived=100, elapsed_s=10)
+    assert p.round_complete(arrived=10, elapsed_s=61)
+
+
+def test_elastic_rescale_resolves_allocation():
+    rm = ResourceManager(ResourcePool({"High": 200}, {"High": 17}))
+    ec = ElasticController(rm)
+    specs = [GradeSpec("High", 100, logical_bundles=200,
+                       bundles_per_device=8, physical_devices=17)]
+    rts = [GradeRuntime(alpha=16.0, beta=21.6, lam=15.0)]
+    before = ec.scale_up("High", bundles=0, task_specs=specs, runtimes=rts)
+    # Lose 12 phones: allocation shifts toward the logical tier.
+    after = ec.node_failure("High", phones=12, task_specs=specs, runtimes=rts)
+    assert after is not None
+    assert after.per_grade[0].physical_devices <= before.per_grade[0].physical_devices
+    assert (after.per_grade[0].logical_devices
+            + after.per_grade[0].physical_devices == 100)
+    assert len(ec.events) == 2

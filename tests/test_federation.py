@@ -1,0 +1,157 @@
+"""Federation service, triggers, scheduler, device models, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deviceflow import Delivery, Message
+from repro.core.devicemodel import GRADES, DeviceModel, Stage
+from repro.core.federation import (
+    AggregationService,
+    ClientCountTrigger,
+    SampleThresholdTrigger,
+    ScheduledTrigger,
+    polynomial_staleness,
+    weighted_average,
+)
+from repro.core.scheduler import (
+    ResourceManager,
+    ResourcePool,
+    TaskManager,
+    TaskRunner,
+)
+from repro.core.task import GradeSpec, OperatorFlow, Task, TaskQueue
+from repro.core.allocation import GradeRuntime
+from repro.optim.compression import (
+    int8_dequantize,
+    int8_quantize,
+    payload_bytes,
+    topk_compress,
+    topk_init,
+)
+
+
+def test_weighted_average_exact():
+    a = {"w": jnp.array([1.0, 2.0])}
+    b = {"w": jnp.array([3.0, 6.0])}
+    avg = weighted_average([a, b], [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(avg["w"]), [2.5, 5.0])
+
+
+def test_sample_threshold_trigger_fires():
+    svc = AggregationService({"w": jnp.zeros(2)},
+                             trigger=SampleThresholdTrigger(10))
+    for i in range(4):
+        svc(Delivery(t=float(i), message=Message(
+            0, i, 0, {"w": jnp.ones(2) * i}, num_samples=3)))
+    assert len(svc.history) == 1  # fired at 12 >= 10
+    assert svc.pending_clients == 0
+
+
+def test_scheduled_trigger_fires_on_tick():
+    svc = AggregationService({"w": jnp.zeros(2)},
+                             trigger=ScheduledTrigger(period=10.0))
+    svc(Delivery(t=1.0, message=Message(0, 0, 0, {"w": jnp.ones(2)},
+                                        num_samples=1)))
+    svc.tick(5.0)
+    assert len(svc.history) == 0
+    svc.tick(10.5)
+    assert len(svc.history) == 1
+
+
+def test_staleness_discount_downweights():
+    svc = AggregationService(
+        {"w": jnp.zeros(1)},
+        trigger=ClientCountTrigger(2),
+        staleness_discount=polynomial_staleness(1.0),
+    )
+    svc.round_idx = 2
+    svc(Delivery(t=0, message=Message(0, 0, round_idx=2,
+                                      payload={"w": jnp.array([10.0])},
+                                      num_samples=1)))
+    svc(Delivery(t=0, message=Message(0, 1, round_idx=0,
+                                      payload={"w": jnp.array([20.0])},
+                                      num_samples=1)))
+    # weights: fresh 1.0, stale (1+2)^-1 = 1/3 -> avg = (10 + 20/3)/(4/3) = 12.5
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]), [12.5])
+
+
+def test_scheduler_admits_by_priority_and_resources():
+    pool = ResourcePool({"High": 100}, {"High": 10})
+    rm = ResourceManager(pool)
+    runner = TaskRunner(
+        rm,
+        runtimes=lambda t: [GradeRuntime(1.0, 1.0, 0.1)] * len(t.grades),
+        tier_runners={"logical": lambda *a: [], "device": lambda *a: []},
+    )
+    tm = TaskManager(rm, runner)
+    flow = OperatorFlow(("train",))
+    big = Task(flow, (GradeSpec("High", 10, logical_bundles=80,
+                                physical_devices=8),), priority=1)
+    small = Task(flow, (GradeSpec("High", 5, logical_bundles=30,
+                                  physical_devices=3),), priority=5)
+    tm.submit(big)
+    tm.submit(small)
+    done = tm.drain()
+    # Priority 5 task runs first; both eventually complete (release frees pool).
+    assert [d.task.priority for d in done] == [5, 1]
+    assert all(d.state.value == "completed" for d in done)
+    assert rm.free().logical_bundles["High"] == 100
+
+
+def test_resource_manager_freeze_release_and_elastic():
+    rm = ResourceManager(ResourcePool({"High": 10}, {"High": 2}))
+    rm.freeze(1, {"High": (4, 1)})
+    assert not rm.fits({"High": (7, 0)})
+    rm.release(1)
+    assert rm.fits({"High": (10, 2)})
+    rm.scale("High", bundles_delta=-5)
+    assert not rm.fits({"High": (6, 0)})
+    with pytest.raises(ValueError):
+        rm.scale("High", phones_delta=-3)
+
+
+def test_device_model_table1_ordering():
+    hi = DeviceModel(0, GRADES["High"], seed=0).run_round(0)
+    lo = DeviceModel(0, GRADES["Low"], seed=0).run_round(0)
+    assert hi.total_power_mah < lo.total_power_mah
+    assert (hi.stage_duration_min[Stage.TRAINING]
+            < lo.stage_duration_min[Stage.TRAINING])
+    assert hi.comm_kb > 0
+
+
+def test_device_model_telemetry_stream():
+    model = DeviceModel(3, GRADES["High"], seed=1)
+    rep = model.run_round(0)
+    samples = list(model.telemetry(rep, hz=1.0))
+    assert len(samples) > 10
+    assert all(s.voltage_mv > 3000 for s in samples)
+    stages = {s.stage for s in samples}
+    assert stages == set(Stage)
+
+
+@settings(max_examples=25, deadline=None)
+@given(frac=st.floats(0.01, 0.5), seed=st.integers(0, 1000))
+def test_topk_compression_error_feedback_roundtrip(frac, seed):
+    rng = np.random.default_rng(seed)
+    update = {"a": jnp.asarray(rng.standard_normal((32, 16)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+    state = topk_init(update)
+    kept, state, stats = topk_compress(update, state, fraction=frac)
+    # Error feedback invariant: kept + residual == update (exactly).
+    for k in update:
+        np.testing.assert_allclose(
+            np.asarray(kept[k]) + np.asarray(state.residual[k]),
+            np.asarray(update[k]), atol=1e-6)
+    assert stats["compression_ratio"] >= 1.0
+
+
+def test_int8_quantization_bounded_error():
+    rng = np.random.default_rng(0)
+    u = {"w": jnp.asarray(rng.standard_normal((128,)) * 3, jnp.float32)}
+    q, s = int8_quantize(u)
+    back = int8_dequantize(q, s, u)
+    scale = float(np.abs(np.asarray(u["w"])).max()) / 127
+    assert float(jnp.abs(back["w"] - u["w"]).max()) <= scale * 0.5 + 1e-6
+    assert payload_bytes(q) == 128  # int8

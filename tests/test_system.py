@@ -1,0 +1,114 @@
+"""End-to-end behaviour tests for the SimDC platform."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.devicemodel import GRADES
+from repro.core.federation import AggregationService, SampleThresholdTrigger
+from repro.core.simulation import DeviceTier, HybridSimulation, LogicalTier
+from repro.core.strategies import AccumulatedStrategy, TimeIntervalStrategy
+from repro.core.traffic_curves import right_tailed_normal
+from repro.data.synthetic_ctr import make_federated_ctr
+from repro.models import ctr as ctr_lib
+
+
+def test_federated_ctr_learns():
+    """The paper's core loop (LR on CTR, FedAvg) improves over rounds."""
+    from benchmarks.common import run_federated_ctr
+
+    out = run_federated_ctr(num_devices=64, rounds=8, dim=64, seed=0)
+    accs = [h["acc"] for h in out["history"]]
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]
+    assert accs[-1] >= 0.6  # learnable synthetic task
+
+
+def test_hybrid_simulation_round_end_to_end():
+    """Allocation split -> both tiers execute -> DeviceFlow -> aggregation."""
+    dim, n_clients, rpd = 32, 12, 10
+    data = make_federated_ctr(num_devices=n_clients, records_per_device=rpd,
+                              dim=dim, seed=0)
+    local = ctr_lib.make_local_train_fn(lr=1e-2, epochs=3)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+
+    svc = AggregationService(params, trigger=SampleThresholdTrigger(
+        n_clients * rpd))
+    flow = DeviceFlow(svc)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+
+    sim = HybridSimulation(
+        LogicalTier(local, cohort_size=8),
+        DeviceTier(local, GRADES["High"], dtype=jnp.bfloat16),
+        deviceflow=flow,
+    )
+    X, Y, counts = data.stacked_shards(np.arange(n_clients), rpd)
+    mask = (np.arange(rpd)[None] < counts[:, None]).astype(np.float32)
+    outcome = sim.run_round(
+        task_id=0, round_idx=0, global_params=params,
+        client_batches={"x": jnp.asarray(X), "y": jnp.asarray(Y),
+                        "mask": jnp.asarray(mask)},
+        num_samples=counts, num_logical=8,
+        rng=jax.random.PRNGKey(1), benchmark_devices=2,
+    )
+    assert outcome.num_logical == 8 and outcome.num_physical == 4
+    assert len(outcome.messages) == n_clients
+    assert len(outcome.reports) == 2  # benchmarking devices measured
+    assert len(svc.history) == 1  # threshold reached -> one aggregation
+    assert flow.conservation_ok(0)
+
+
+def test_logical_vs_device_tier_numerical_gap_small():
+    """Fig 6 premise: bf16 'device operators' track f32 'logical operators'."""
+    dim = 32
+    data = make_federated_ctr(num_devices=4, records_per_device=16,
+                              dim=dim, seed=2)
+    local = ctr_lib.make_local_train_fn(lr=1e-3, epochs=10)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    X, Y, counts = data.stacked_shards(np.arange(4), 16)
+    batch = {"x": jnp.asarray(X[0]), "y": jnp.asarray(Y[0]),
+             "mask": jnp.ones(16, jnp.float32)}
+    p32, _ = jax.jit(local)(params, batch, jax.random.PRNGKey(0))
+    tier = DeviceTier(local, GRADES["Low"], dtype=jnp.bfloat16)
+    pbf, _, _ = tier.run_device(0, params, batch, jax.random.PRNGKey(0), 0)
+    diff = float(jnp.abs(p32["w"] - pbf["w"]).max())
+    assert diff < 5e-2  # operators differ but remain close (paper <0.5% ACC)
+
+
+def test_traffic_curve_shifts_aggregation_timing():
+    """Fig 9 behaviour: slower curves delay aggregation completion."""
+    results = {}
+    for sigma in (1.0, 3.0):
+        deliveries = []
+        flow = DeviceFlow(lambda d: deliveries.append(d))
+        flow.register_task(0, TimeIntervalStrategy(
+            curve=right_tailed_normal(sigma, hi=12.0), interval=600.0))
+        for i in range(400):
+            flow.submit(Message(0, i, 0, payload=None))
+        flow.round_complete(0)
+        flow.run()
+        ts = np.array([d.t for d in deliveries])
+        # time by which half the messages have arrived
+        results[sigma] = np.percentile(ts, 50)
+        deliveries.clear()
+    assert results[1.0] < results[3.0]
+
+
+def test_serve_pipeline_end_to_end():
+    from repro.launch.serve import BatchedServer
+    from repro.configs.registry import get_config
+
+    cfg = get_config("llama3_2_3b", smoke=True)
+    server = BatchedServer(cfg, batch_size=2, prompt_len=8, decode_tokens=4,
+                           max_len=16)
+    flow = DeviceFlow(server)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        flow.submit(Message(0, i, 0, payload={
+            "tokens": rng.integers(1, cfg.vocab_size, 8).astype(np.int32)}))
+    flow.run()
+    server.drain(flow.clock.now)
+    # 4 requests in batches of 2 -> 2 batches x 4 decode steps x 2 seqs
+    assert sum(m.tokens_decoded for m in server.metrics) == 16
