@@ -164,6 +164,81 @@ def fig8_scalability() -> list[Row]:
 
 
 # --------------------------------------------------------------------------- #
+# Fig 8 (cont.) — batched device tier: devices simulated per second
+# --------------------------------------------------------------------------- #
+def fig8_device_tier_batched() -> list[Row]:
+    """Devices-per-second of the *device-simulation* tier (bf16 backend).
+
+    Compares the batched cohort engine (``DeviceTier.run_cohort`` + one
+    vectorized ``DeviceFleet`` sample) against the seed's per-device loop
+    (one ``jax.jit`` dispatch + a fresh ``DeviceModel`` per device).  Also
+    checks the cohort path reproduces the loop's numerics per device.
+    """
+    from repro.core.simulation import DeviceTier
+
+    rows = []
+    dim, rpd = 64, 16
+    local = ctr_lib.make_local_train_fn(lr=1e-3, epochs=10)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    rng = np.random.default_rng(0)
+    tier = DeviceTier(local, GRADES["High"], cohort_size=1024)
+    take = lambda tree, sl: jax.tree.map(lambda x: x[sl], tree)
+    loop_per_dev_s = None
+
+    def run_batched(batch, keys, n, round_idx):
+        outs = []
+        for lo in range(0, n, tier.cohort_size):
+            sl = slice(lo, min(lo + tier.cohort_size, n))
+            new_p, _ = tier.run_cohort(params, take(batch, sl), keys[sl])
+            outs.append(new_p)
+        tier.sample_round(np.arange(n), round_idx)  # behavioral sample
+        return jax.block_until_ready(
+            jax.tree.map(lambda *xs: jnp.concatenate(xs), *outs))
+
+    for n in (1000, 10000):
+        batch = {
+            "x": jnp.asarray(rng.standard_normal((n, rpd, dim)), jnp.float32),
+            "y": jnp.asarray((rng.random((n, rpd)) < 0.3), jnp.float32),
+            "mask": jnp.ones((n, rpd), jnp.float32),
+        }
+        keys = jax.random.split(jax.random.PRNGKey(1), n)
+        run_batched(batch, keys, n, 0)  # compile
+        t0 = time.perf_counter()
+        stacked = run_batched(batch, keys, n, 1)
+        dt_batched = time.perf_counter() - t0
+
+        if n == 1000:  # seed per-device loop, measured once at 1k devices
+            tier._jit(params, take(batch, 0), keys[0])  # compile
+            t0 = time.perf_counter()
+            loop_out = []
+            for j in range(n):
+                new_p, _, _ = tier.run_device(
+                    j, params, take(batch, j), keys[j], 1, benchmark=True)
+                loop_out.append(new_p)
+            jax.block_until_ready(loop_out[-1])
+            dt_loop = time.perf_counter() - t0
+            loop_per_dev_s = dt_loop / n
+            loop_stack = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *loop_out)
+            max_diff = max(
+                float(jnp.abs(a - b).max()) for a, b in zip(
+                    jax.tree.leaves(stacked), jax.tree.leaves(loop_stack)))
+            speedup = dt_loop / dt_batched
+            rows.append(Row(
+                f"fig8/device_tier/loop{n}", dt_loop * 1e6,
+                f"devices_per_s={n / dt_loop:.0f}"))
+            rows.append(Row(
+                "fig8/device_tier/claim_batched_5x_and_matches", 0.0,
+                f"speedup={speedup:.1f};max_dev_diff={max_diff:.2e};"
+                f"ok={speedup >= 5.0 and max_diff < 2e-2}"))
+        rows.append(Row(
+            f"fig8/device_tier/batched{n}", dt_batched * 1e6,
+            f"devices_per_s={n / dt_batched:.0f};"
+            f"loop_est_s={loop_per_dev_s * n:.2f}"))
+    return rows
+
+
+# --------------------------------------------------------------------------- #
 # Fig 9 — device-behavior traffic curves change aggregation outcomes
 # --------------------------------------------------------------------------- #
 def fig9_traffic_impact() -> list[Row]:
@@ -297,6 +372,7 @@ ALL_BENCHMARKS = (
     fig6_hybrid_accuracy,
     fig7_allocation_time,
     fig8_scalability,
+    fig8_device_tier_batched,
     fig9_traffic_impact,
     fig10_dispatch_fidelity,
     fig11_dropout,

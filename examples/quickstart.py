@@ -1,8 +1,10 @@
 """Quickstart: the SimDC platform in ~60 lines.
 
 Simulates a small federated CTR task end-to-end: hybrid allocation decides
-the logical/physical split, both tiers run client-local training, DeviceFlow
-replays the device-behavior traffic, and the cloud aggregates with FedAvg.
+the logical/physical split, both tiers run client-local training in batched
+(vmapped) cohorts, the device fleet's sampled Table-I round durations become
+per-message arrival times through DeviceFlow, and the cloud aggregates with
+FedAvg while tracking real queuing latency.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -51,7 +53,7 @@ mask = (np.arange(RECORDS)[None] < counts[:, None]).astype(np.float32)
 test = make_federated_ctr(num_devices=64, dim=DIM, seed=1)
 
 for rnd in range(ROUNDS):
-    sim.run_round(
+    outcome = sim.run_round(
         task_id=0, round_idx=rnd, global_params=svc.global_params,
         client_batches={"x": jnp.asarray(X), "y": jnp.asarray(Y),
                         "mask": jnp.asarray(mask)},
@@ -62,7 +64,9 @@ for rnd in range(ROUNDS):
     acc = float(ctr.accuracy(svc.global_params,
                              jnp.asarray(test.features),
                              jnp.asarray(test.labels)))
-    print(f"round {rnd}: aggregations={len(svc.history)} test_acc={acc:.4f}")
+    last_arrival = float(np.max(outcome.arrival_times))
+    print(f"round {rnd}: aggregations={len(svc.history)} test_acc={acc:.4f} "
+          f"round_end_t={last_arrival:.1f}s")
 
 if sim.device.reports:
     print("benchmark-device report:",

@@ -15,6 +15,15 @@ the device population.  Four modules (paper Fig. 4):
 Everything runs against a *virtual clock* (deterministic event-driven
 simulation), which is the TPU-container adaptation of the paper's wall-clock
 network component: identical ordering semantics, fully reproducible.
+
+Arrival-time contract (batched round engine): the simulation tiers sample
+per-device round durations from ``DeviceFleet`` and hand them to the Sorter as
+arrival times — ``submit(msg, t)`` stamps ``Message.created_t`` at submit time
+so downstream latency/staleness accounting sees real queuing delay, and
+``submit_many(msgs, ts)`` is the bulk fast path: messages are routed, sorted
+by arrival time, shelved in one append, and the accumulated dispatcher drains
+per threshold *crossing* (timestamped at the message that crossed it) instead
+of via one Python call per message.
 """
 from __future__ import annotations
 
@@ -22,7 +31,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
-from typing import Any, Callable, Iterable
+from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
@@ -68,6 +77,13 @@ class Shelf:
     def put(self, msg: Message) -> None:
         self._buf.append(msg)
         self.total_received += 1
+
+    def put_many(self, msgs: Iterable[Message]) -> int:
+        n0 = len(self._buf)
+        self._buf.extend(msgs)
+        added = len(self._buf) - n0
+        self.total_received += added
+        return added
 
     def take(self, n: int) -> list[Message]:
         n = min(n, len(self._buf))
@@ -116,14 +132,47 @@ class Dispatcher:
 
     # -- real-time accumulated path ----------------------------------------
     def on_message(self, t: float) -> None:
-        """Called by the Sorter after every shelf insertion."""
+        """Called by the Sorter after every shelf insertion.
+
+        Drains in a loop: with bulk restores or a shrinking ``threshold_at``
+        schedule the shelf can sit multiple thresholds above the waterline —
+        a single-batch dispatch would strand that backlog forever.
+        """
         if not isinstance(self.strategy, AccumulatedStrategy):
             return
-        thr = self.strategy.threshold_at(self._cycle)
-        if len(self.shelf) >= thr:
+        while len(self.shelf) >= (thr := self.strategy.threshold_at(self._cycle)):
             batch = self.shelf.take(thr)
             self._cycle += 1
             self._send(t, batch, self.strategy.failure_prob, 0)
+
+    def on_messages(self, ts: np.ndarray, t_base: float) -> None:
+        """Bulk-insert hook: ``len(ts)`` messages (already shelved, arrival
+        order) landed at times ``ts``; dispatch once per threshold crossing.
+
+        Equivalent to calling ``on_message(ts[j])`` after each insertion, but
+        O(dispatch events) instead of O(messages) Python work.  Pre-existing
+        backlog above the threshold drains at ``t_base``.
+        """
+        if not isinstance(self.strategy, AccumulatedStrategy):
+            return
+        k = len(ts)
+        pre = len(self.shelf) - k  # messages buffered before this bulk insert
+        arrived = consumed = 0
+        while True:
+            thr = self.strategy.threshold_at(self._cycle)
+            avail = pre + arrived - consumed
+            if avail < thr:
+                need = thr - avail
+                if arrived + need > k:
+                    break  # not enough arrivals left to cross the threshold
+                arrived += need
+                t_evt = float(ts[arrived - 1])
+            else:
+                t_evt = float(ts[arrived - 1]) if arrived > 0 else t_base
+            batch = self.shelf.take(thr)
+            self._cycle += 1
+            consumed += thr
+            self._send(t_evt, batch, self.strategy.failure_prob, 0)
 
     # -- rule-based path -----------------------------------------------------
     def on_round_complete(self, t: float, clock: "VirtualClock") -> None:
@@ -161,6 +210,16 @@ class Dispatcher:
                 continue
             self.shelf.total_dispatched += 1
             self.deliver(Delivery(t=t, message=m))
+
+    # -- checkpointing hooks -----------------------------------------------
+    def state_dict(self) -> dict:
+        """Dispatch-progress state: the accumulated-strategy threshold cursor
+        and the failure/discard RNG stream (so restores don't replay it)."""
+        return {"cycle": self._cycle, "rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, d: dict) -> None:
+        self._cycle = int(d["cycle"])
+        self.rng.bit_generator.state = d["rng"]
 
 
 class VirtualClock:
@@ -217,7 +276,12 @@ class DeviceFlow:
 
     # -- Sorter ----------------------------------------------------------------
     def submit(self, msg: Message, t: float | None = None) -> None:
-        """Sorter entry point: route by task_id, trigger accumulated dispatch."""
+        """Sorter entry point: route by task_id, trigger accumulated dispatch.
+
+        Stamps ``Message.created_t`` at submit time (when not pre-stamped by
+        the producer) so delivery latency ``Delivery.t - created_t`` reflects
+        real shelf queuing delay.
+        """
         t = self.clock.now if t is None else t
         try:
             shelf = self._shelves[msg.task_id]
@@ -225,12 +289,49 @@ class DeviceFlow:
             raise KeyError(
                 f"message for unregistered task {msg.task_id}"
             ) from None
+        if msg.created_t == 0.0 and t != 0.0:
+            msg = dataclasses.replace(msg, created_t=t)
         shelf.put(msg)
         self._dispatchers[msg.task_id].on_message(t)
 
-    def submit_many(self, msgs: Iterable[Message]) -> None:
-        for m in msgs:
-            self.submit(m)
+    def submit_many(self, msgs: Iterable[Message],
+                    ts: "np.ndarray | Sequence[float] | None" = None) -> None:
+        """Bulk Sorter fast path: route once per task, not once per message.
+
+        ``ts`` (optional) gives per-message arrival times — e.g. the fleet-
+        sampled round durations from the simulation tiers.  Within each task
+        messages are shelved in arrival-time order and the accumulated
+        dispatcher fires once per threshold crossing, timestamped at the
+        message that crossed it — identical semantics to per-message
+        ``submit`` in time order, minus the per-message Python overhead.
+        """
+        msgs = list(msgs)
+        if not msgs:
+            return
+        now = self.clock.now
+        if ts is None:
+            ts_arr = np.full(len(msgs), now, dtype=float)
+        else:
+            ts_arr = np.asarray(ts, dtype=float)
+            if ts_arr.shape != (len(msgs),):
+                raise ValueError("ts must align 1:1 with msgs")
+        by_task: dict[int, list[int]] = {}
+        for i, m in enumerate(msgs):
+            by_task.setdefault(m.task_id, []).append(i)
+        for tid, idxs in by_task.items():
+            try:
+                shelf = self._shelves[tid]
+            except KeyError:
+                raise KeyError(f"message for unregistered task {tid}") from None
+            order = sorted(idxs, key=lambda i: ts_arr[i])
+            stamped = []
+            for i in order:
+                m, t = msgs[i], float(ts_arr[i])
+                if m.created_t == 0.0 and t != 0.0:
+                    m = dataclasses.replace(m, created_t=t)
+                stamped.append(m)
+            shelf.put_many(stamped)
+            self._dispatchers[tid].on_messages(ts_arr[order], t_base=now)
 
     # -- round boundaries --------------------------------------------------------
     def round_complete(self, task_id: int, t: float | None = None) -> None:
@@ -251,13 +352,22 @@ class DeviceFlow:
 
     # -- checkpointing ----------------------------------------------------------------
     def state_dict(self) -> dict:
-        return {tid: s.state_dict() for tid, s in self._shelves.items()}
+        return {
+            tid: {"shelf": s.state_dict(),
+                  "dispatcher": self._dispatchers[tid].state_dict()}
+            for tid, s in self._shelves.items()
+        }
 
     def load_state_dict(self, d: dict) -> None:
         for tid, sd in d.items():
-            shelf = Shelf.from_state_dict(sd)
+            # Accept both the nested format and legacy shelf-only dicts.
+            shelf_sd = sd["shelf"] if "shelf" in sd else sd
+            shelf = Shelf.from_state_dict(shelf_sd)
             self._shelves[tid] = shelf
             if tid in self._strategies:
-                self._dispatchers[tid] = Dispatcher(
+                disp = Dispatcher(
                     shelf, self._strategies[tid], self._deliver, seed=self._seed
                 )
+                if "dispatcher" in sd:
+                    disp.load_state_dict(sd["dispatcher"])
+                self._dispatchers[tid] = disp

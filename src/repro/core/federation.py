@@ -59,6 +59,10 @@ class AggregationEvent:
     num_clients: int
     num_samples: int
     global_params: Params
+    # Mean shelf-queuing delay of the aggregated updates: delivery time minus
+    # ``Message.created_t`` (stamped by DeviceFlow at submit from the fleet's
+    # sampled round durations).  Zero only when updates arrive instantly.
+    mean_latency_s: float = 0.0
 
 
 class AggregationService:
@@ -81,6 +85,7 @@ class AggregationService:
         self.on_aggregate = on_aggregate
         self._pending: list[Message] = []
         self._pending_samples = 0
+        self._pending_latency = 0.0
         self.round_idx = 0
         self.history: list[AggregationEvent] = []
 
@@ -88,6 +93,7 @@ class AggregationService:
     def __call__(self, d: Delivery) -> None:
         self._pending.append(d.message)
         self._pending_samples += d.message.num_samples
+        self._pending_latency += max(0.0, d.t - d.message.created_t)
         if self.trigger.should_fire(self, d.t):
             self.aggregate(d.t)
 
@@ -116,10 +122,12 @@ class AggregationService:
             num_clients=len(self._pending),
             num_samples=self._pending_samples,
             global_params=self.global_params,
+            mean_latency_s=self._pending_latency / len(self._pending),
         )
         self.history.append(ev)
         self._pending = []
         self._pending_samples = 0
+        self._pending_latency = 0.0
         self.round_idx += 1
         if self.on_aggregate is not None:
             self.on_aggregate(ev)

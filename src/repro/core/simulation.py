@@ -14,6 +14,16 @@ devices; cohorts iterate to reach arbitrary population sizes (the paper's
 here) and — crucially for the Fig. 6 reproduction — executes the *same
 operator flow through a numerically different backend* (bf16 accumulation vs
 f32), mirroring the paper's PyMNN-vs-C++-MNN operator discrepancy.
+
+**Batched round engine.**  Both tiers execute whole cohorts per dispatch:
+``DeviceTier.run_cohort`` vmaps the (bf16-backend) local step over a chunk of
+devices, so a 1k-device round costs a handful of XLA dispatches instead of 1k
+``jax.jit`` calls; the behavioral side is one vectorized ``DeviceFleet``
+sample of all devices × 5 Table-I stages.  ``HybridSimulation.run_round``
+derives per-device arrival times from those sampled round durations when the
+caller doesn't pass ``arrival_times``, stamps them into ``Message.created_t``,
+and feeds DeviceFlow through the bulk ``submit_many`` Sorter path — the
+arrival-time contract between the tiers and DeviceFlow.
 """
 from __future__ import annotations
 
@@ -26,7 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deviceflow import DeviceFlow, Message
-from repro.core.devicemodel import DeviceGrade, DeviceModel, RoundReport
+from repro.core.devicemodel import (
+    DeviceFleet,
+    DeviceGrade,
+    FleetRoundSample,
+    RoundReport,
+)
 
 Params = Any
 Batch = Any
@@ -105,9 +120,15 @@ class LogicalTier:
 class DeviceTier:
     """Calibrated device-simulation tier.
 
-    Runs the same local computation (optionally through a numerically distinct
-    backend dtype to reproduce the paper's operator discrepancy) and charges
-    virtual time/energy via ``DeviceModel``.
+    Runs the same local computation through a numerically distinct backend
+    dtype (the paper's operator discrepancy) and charges virtual time/energy
+    via a persistent ``DeviceFleet`` — one vectorized Table-I sample per
+    round, per-device RNG streams that *survive* across rounds (a fresh
+    ``DeviceModel`` per call would restart every device's jitter every round).
+
+    ``run_cohort`` is the batched execution path: one vmapped XLA dispatch
+    simulates a whole chunk of devices; ``run_device`` remains as the
+    single-device view (same numerics, same fleet).
     """
 
     def __init__(
@@ -118,14 +139,59 @@ class DeviceTier:
         dtype: Any = jnp.bfloat16,
         seed: int = 0,
         train_cost_scale: float = 1.0,
+        cohort_size: int = 256,
+        jitter: float = 0.08,
     ):
         self.grade = grade
         self.dtype = dtype
         self.seed = seed
         self.train_cost_scale = train_cost_scale
+        self.cohort_size = cohort_size
         self.local_train = local_train
-        self._jit = jax.jit(local_train)
+        self._jit = jax.jit(self._device_step)
+        self._vjit = jax.jit(self._cohort_step)
+        self.fleet = DeviceFleet(grade, 0, seed=seed, jitter=jitter)
         self.reports: list[RoundReport] = []
+
+    # -- numerically-distinct backend: cast in, compute, cast back ---------
+    def _device_step(self, global_params: Params, batch: Batch, rng: jax.Array):
+        cast_in = lambda x: (
+            x.astype(self.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
+        )
+        p = jax.tree.map(cast_in, global_params)
+        b = jax.tree.map(cast_in, batch)
+        new_p, metrics = self.local_train(p, b, rng)
+        new_p = jax.tree.map(
+            lambda x, ref: x.astype(ref.dtype)
+            if jnp.issubdtype(ref.dtype, jnp.floating)
+            else x,
+            new_p,
+            global_params,
+        )
+        return new_p, metrics
+
+    def _cohort_step(self, global_params: Params, batches: Batch,
+                     rngs: jax.Array):
+        n = jax.tree.leaves(batches)[0].shape[0]
+        stacked = _stack_params(global_params, n)
+        return jax.vmap(self._device_step, in_axes=(0, 0, 0))(
+            stacked, batches, rngs)
+
+    def run_cohort(
+        self,
+        global_params: Params,
+        batches: Batch,  # leaves shaped (cohort, ...)
+        rngs: jax.Array,  # (cohort, key)
+    ) -> tuple[Params, dict]:
+        """One XLA dispatch simulating a whole device cohort (bf16 backend)."""
+        return self._vjit(global_params, batches, rngs)
+
+    def sample_round(self, device_ids: np.ndarray, round_idx: int
+                     ) -> "FleetRoundSample":
+        """Vectorized Table-I behavior sample for ``device_ids`` this round."""
+        rows = self.fleet.rows_for(np.asarray(device_ids))
+        return self.fleet.run_round(
+            round_idx, train_cost_scale=self.train_cost_scale, rows=rows)
 
     def run_device(
         self,
@@ -137,24 +203,11 @@ class DeviceTier:
         *,
         benchmark: bool = False,
     ) -> tuple[Params, dict, RoundReport | None]:
-        # Numerically-distinct backend: cast to device dtype, compute, cast back.
-        cast_in = lambda x: (
-            x.astype(self.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
-        )
-        p = jax.tree.map(cast_in, global_params)
-        b = jax.tree.map(cast_in, batch)
-        new_p, metrics = self._jit(p, b, rng)
-        new_p = jax.tree.map(
-            lambda x, ref: x.astype(ref.dtype)
-            if jnp.issubdtype(ref.dtype, jnp.floating)
-            else x,
-            new_p,
-            global_params,
-        )
+        new_p, metrics = self._jit(global_params, batch, rng)
         report = None
         if benchmark:
-            model = DeviceModel(device_id, self.grade, seed=self.seed)
-            report = model.run_round(round_idx, train_cost_scale=self.train_cost_scale)
+            sample = self.sample_round(np.array([device_id]), round_idx)
+            report = sample.report(0)
             self.reports.append(report)
         return new_p, metrics, report
 
@@ -165,6 +218,7 @@ class FederatedRoundOutcome:
     num_physical: int
     messages: list[Message]
     reports: list[RoundReport]
+    arrival_times: np.ndarray | None = None  # per-message virtual times
 
 
 class HybridSimulation:
@@ -205,7 +259,19 @@ class HybridSimulation:
         msgs: list[Message] = []
         reports: list[RoundReport] = []
 
-        # Logical tier: one vectorized cohort (chunked by cohort_size).
+        def emit(host_params, lo, hi):
+            for j in range(hi - lo):
+                msgs.append(
+                    Message(
+                        task_id=task_id,
+                        device_id=lo + j,
+                        round_idx=round_idx,
+                        payload=jax.tree.map(lambda x: x[j], host_params),
+                        num_samples=int(num_samples[lo + j]),
+                    )
+                )
+
+        # Logical tier: vectorized cohorts (chunked by cohort_size).
         idx = 0
         while idx < num_logical:
             hi = min(idx + self.logical.cohort_size, num_logical)
@@ -216,50 +282,50 @@ class HybridSimulation:
                 sub,
                 num_samples[idx:hi],
             )
-            host_params = jax.device_get(res.params)
-            for j in range(hi - idx):
-                msgs.append(
-                    Message(
-                        task_id=task_id,
-                        device_id=idx + j,
-                        round_idx=round_idx,
-                        payload=jax.tree.map(lambda x: x[j], host_params),
-                        num_samples=int(num_samples[idx + j]),
-                    )
-                )
+            emit(jax.device_get(res.params), idx, hi)
             idx = hi
 
-        # Device tier: per-device execution with calibrated models.
-        for j in range(num_logical, n_total):
+        # Device tier: vectorized cohorts through the bf16 backend — one
+        # vmapped dispatch per chunk instead of one jit call per device.
+        idx = num_logical
+        while idx < n_total:
+            hi = min(idx + self.device.cohort_size, n_total)
             rng, sub = jax.random.split(rng)
-            new_p, _, rep = self.device.run_device(
-                j,
+            new_p, _ = self.device.run_cohort(
                 global_params,
-                take(client_batches, j),
-                sub,
-                round_idx,
-                benchmark=(j - num_logical) < benchmark_devices,
+                take(client_batches, slice(idx, hi)),
+                jax.random.split(sub, hi - idx),
             )
-            if rep is not None:
-                reports.append(rep)
-            msgs.append(
-                Message(
-                    task_id=task_id,
-                    device_id=j,
-                    round_idx=round_idx,
-                    payload=jax.device_get(new_p),
-                    num_samples=int(num_samples[j]),
-                )
-            )
+            emit(jax.device_get(new_p), idx, hi)
+            idx = hi
+
+        # Behavioral side: one vectorized fleet sample covers every simulated
+        # device this round — Table-I durations become arrival times, and the
+        # benchmarking subset materializes full RoundReports (paper §IV.C).
+        sample: FleetRoundSample | None = None
+        if n_total > 0:
+            sample = self.device.sample_round(np.arange(n_total), round_idx)
+        n_bench = min(benchmark_devices, n_total - num_logical)
+        for k in range(n_bench):
+            rep = sample.report(num_logical + k)
+            reports.append(rep)
+            self.device.reports.append(rep)
+
+        if arrival_times is None and sample is not None:
+            base = 0.0 if self.deviceflow is None else self.deviceflow.clock.now
+            arrival_times = base + sample.arrival_offsets_s()
 
         if self.deviceflow is not None:
-            for i, m in enumerate(msgs):
-                t = None if arrival_times is None else float(arrival_times[i])
-                self.deviceflow.submit(m, t=t)
-            self.deviceflow.round_complete(task_id)
+            self.deviceflow.submit_many(msgs, ts=arrival_times)
+            # The round ends when the slowest device reports, not at clock.now.
+            t_end = (float(np.max(arrival_times))
+                     if arrival_times is not None and len(arrival_times)
+                     else None)
+            self.deviceflow.round_complete(task_id, t=t_end)
         return FederatedRoundOutcome(
             num_logical=num_logical,
             num_physical=n_total - num_logical,
             messages=msgs,
             reports=reports,
+            arrival_times=arrival_times,
         )

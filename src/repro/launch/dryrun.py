@@ -80,8 +80,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t1
 
+    from repro.roofline.hlo_analysis import normalize_cost_analysis
+
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
 
     rec = {

@@ -28,6 +28,7 @@ from repro.configs.base import SHAPES, ShapeConfig, choose_mesh_plan
 from repro.configs.registry import get_config
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.devicemodel import GRADES, DeviceFleet
 from repro.core.federation import (
     AggregationService,
     SampleThresholdTrigger,
@@ -107,6 +108,9 @@ def federated_training(args) -> dict:
     )
     svc = AggregationService(global_params, trigger=trigger)
     flow = DeviceFlow(svc, seed=args.seed)
+    # Behavioral fleet: per-round Table-I durations become message arrival
+    # times, so aggregation sees realistic queuing delay (not created_t=0).
+    fleet = DeviceFleet(GRADES["High"], args.clients_per_round, seed=args.seed)
     task_id = 0
     if args.traffic == "realtime":
         flow.register_task(task_id, AccumulatedStrategy(
@@ -148,6 +152,7 @@ def federated_training(args) -> dict:
         losses.append(float(loss.mean()))
 
         host = jax.device_get(new_params)
+        msgs = []
         for c in range(cohort):
             payload = jax.tree.map(lambda x: x[c], host)
             if args.compress:
@@ -155,16 +160,27 @@ def federated_training(args) -> dict:
                     comp_state = topk_init(payload)
                 payload, comp_state, stats = topk_compress(
                     payload, comp_state, fraction=args.compress_fraction)
-            flow.submit(Message(
+            msgs.append(Message(
                 task_id=task_id, device_id=c, round_idx=rnd,
                 payload=payload, num_samples=seq,
             ))
-        flow.round_complete(task_id)
-        flow.run(flow.clock.now + args.round_seconds)
+        # Bulk Sorter path: fleet-sampled round durations as arrival times.
+        arrivals = flow.clock.now + fleet.run_round(rnd).arrival_offsets_s()
+        flow.submit_many(msgs, ts=arrivals)
+        flow.round_complete(task_id, t=float(arrivals.max()))
+        # Rule-based dispatch points extend up to round_seconds past the
+        # round end (= the slowest arrival); the run window must cover them
+        # or the round's deliveries slip into the next window.
+        flow.run(float(arrivals.max()) + args.round_seconds)
         svc.tick(flow.clock.now)
+        lat = svc.history[-1].mean_latency_s if svc.history else 0.0
         print(f"round {rnd:3d} client-loss {losses[-1]:.4f} "
               f"aggregations {len(svc.history)} "
+              f"mean-latency {lat:.1f}s "
               f"shelf {len(flow.shelf(task_id))}", flush=True)
+    # Drain capacity-spill dispatches scheduled past the last window.
+    flow.run()
+    svc.tick(flow.clock.now)
     return {"losses": losses, "aggregations": len(svc.history)}
 
 

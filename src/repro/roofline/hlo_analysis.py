@@ -351,6 +351,18 @@ def _attach_const_vals(module: HloModule, text: str) -> None:
             cur._const_vals.append(int(m.group(1)))  # type: ignore[attr-defined]
 
 
+def normalize_cost_analysis(ca: Any) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a list with one properties-dict per partition; newer
+    versions return the dict directly.  Always hand back a plain dict (empty
+    when the backend reports nothing).
+    """
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def analyze_hlo(text: str) -> dict:
     """Parse one per-device HLO module; return flop/byte/collective totals."""
     mod = HloModule(text)

@@ -1,0 +1,135 @@
+"""Minimal in-repo fallback for ``hypothesis`` (property-based testing).
+
+The tier-1 suite uses a small slice of the hypothesis API (``given``,
+``settings``, and a handful of strategies).  CI installs the real package via
+``pyproject.toml``'s ``test`` extra; hermetic containers without network
+access fall back to this stub so the property tests still *run* (seeded
+pseudo-random example generation) instead of failing collection with
+``ModuleNotFoundError``.
+
+Differences from real hypothesis: no shrinking, no example database, no
+``@example`` replay — just N deterministic random examples per test.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+IS_FALLBACK = True
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = False,
+           allow_infinity: bool = False) -> SearchStrategy:
+    span = max_value - min_value
+
+    def draw(rng):
+        # Hit the endpoints occasionally — they are where bugs live.
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return float(min_value + span * rng.random())
+
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(size)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def builds(target, *arg_strategies, **kw_strategies) -> SearchStrategy:
+    def draw(rng):
+        args = [s.example(rng) for s in arg_strategies]
+        kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+        return target(*args, **kwargs)
+
+    return SearchStrategy(draw)
+
+
+class settings:
+    """Decorator recording ``max_examples`` on the wrapped test."""
+
+    def __init__(self, max_examples: int | None = None, deadline=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._hypo_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hypo_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"args={drawn!r} kwargs={drawn_kw!r}"
+                    ) from e
+
+        # pytest must not mistake the drawn parameters for fixtures: hide the
+        # original signature from inspect (which otherwise follows __wrapped__).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` / ``hypothesis.strategies`` modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from",
+                 "builds"):
+        setattr(strat, name, globals()[name])
+    strat.SearchStrategy = SearchStrategy
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strat
+    mod.IS_FALLBACK = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

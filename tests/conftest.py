@@ -5,3 +5,11 @@ import sys
 # flag in a separate process; never here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # real hypothesis when installed (CI: pip install -e ".[test]")
+    import hypothesis  # noqa: F401
+except ImportError:  # hermetic containers: seeded-random fallback
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()

@@ -6,7 +6,9 @@ import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.allocation import GradeRuntime
+from repro.core.deviceflow import DeviceFlow, Message
 from repro.core.scheduler import ResourceManager, ResourcePool
+from repro.core.strategies import AccumulatedStrategy
 from repro.core.task import GradeSpec
 from repro.runtime.fault_tolerance import (
     ElasticController,
@@ -89,6 +91,46 @@ def test_straggler_policy():
     assert not p.round_complete(arrived=99, elapsed_s=10)
     assert p.round_complete(arrived=100, elapsed_s=10)
     assert p.round_complete(arrived=10, elapsed_s=61)
+
+
+def test_deviceflow_dispatcher_state_survives_checkpoint():
+    """Regression: restore rebuilt Dispatchers from scratch, losing ``_cycle``
+    — an AccumulatedStrategy with per-cycle thresholds silently restarted at
+    threshold 0 after a checkpoint restore."""
+    strategy = AccumulatedStrategy(thresholds=(2, 5))
+
+    def mk(sink):
+        flow = DeviceFlow(sink, seed=0)
+        flow.register_task(0, strategy)
+        return flow
+
+    got = []
+    flow = mk(got.append)
+    for i in range(2):  # first cycle (threshold 2) fires -> cursor at 1
+        flow.submit(Message(0, i, 0, payload=i), t=1.0)
+    assert len(got) == 2
+    state = flow.state_dict()
+
+    restored_got = []
+    restored = mk(restored_got.append)
+    restored.load_state_dict(state)
+    for i in range(4):  # below the *current* threshold of 5: must NOT fire
+        restored.submit(Message(0, 10 + i, 0, payload=i), t=2.0)
+    assert restored_got == []
+    restored.submit(Message(0, 99, 0, payload="x"), t=3.0)
+    assert len(restored_got) == 5  # fires exactly at the cycle-1 threshold
+    assert restored.conservation_ok(0)
+
+
+def test_deviceflow_accepts_legacy_shelf_only_state():
+    got = []
+    flow = DeviceFlow(got.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(100,)))
+    legacy = {0: {"task_id": 0, "buf": [Message(0, 0, 0, payload=0)],
+                  "received": 1, "dispatched": 0, "dropped": 0}}
+    flow.load_state_dict(legacy)
+    assert len(flow.shelf(0)) == 1
+    assert flow.conservation_ok(0)
 
 
 def test_elastic_rescale_resolves_allocation():

@@ -1,0 +1,231 @@
+"""Batched round engine: fleet fidelity, cohort numerics, arrival times."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.devicemodel import GRADES, DeviceFleet, Stage
+from repro.core.federation import AggregationService, SampleThresholdTrigger
+from repro.core.simulation import DeviceTier, HybridSimulation, LogicalTier
+from repro.core.strategies import AccumulatedStrategy
+from repro.data.synthetic_ctr import make_federated_ctr
+from repro.models import ctr as ctr_lib
+
+
+def _ctr_setup(n_clients=12, rpd=8, dim=16, seed=0):
+    data = make_federated_ctr(num_devices=n_clients, records_per_device=rpd,
+                              dim=dim, seed=seed)
+    local = ctr_lib.make_local_train_fn(lr=1e-2, epochs=2)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    X, Y, counts = data.stacked_shards(np.arange(n_clients), rpd)
+    mask = (np.arange(rpd)[None] < counts[:, None]).astype(np.float32)
+    batches = {"x": jnp.asarray(X), "y": jnp.asarray(Y),
+               "mask": jnp.asarray(mask)}
+    return local, params, batches, counts
+
+
+# --------------------------------------------------------------------------- #
+# DeviceFleet — vectorized Table-I sampling with persistent per-device RNG
+# --------------------------------------------------------------------------- #
+def test_fleet_round_to_round_variation():
+    """Regression: the seed rebuilt DeviceModel(seed) per call, so every
+    round replayed identical jitter — fleet streams must persist."""
+    fleet = DeviceFleet(GRADES["High"], 4, seed=0)
+    s0, s1 = fleet.run_round(0), fleet.run_round(1)
+    for i in range(4):
+        assert s0.report(i).total_duration_min != s1.report(i).total_duration_min
+        assert s0.report(i).total_power_mah != s1.report(i).total_power_mah
+
+
+def test_device_tier_benchmark_reports_vary_across_rounds():
+    local, params, batches, _ = _ctr_setup()
+    tier = DeviceTier(local, GRADES["High"])
+    take = jax.tree.map(lambda x: x[0], batches)
+    _, _, r0 = tier.run_device(0, params, take, jax.random.PRNGKey(0), 0,
+                               benchmark=True)
+    _, _, r1 = tier.run_device(0, params, take, jax.random.PRNGKey(1), 1,
+                               benchmark=True)
+    assert r0.device_id == r1.device_id == 0
+    assert r0.total_duration_min != r1.total_duration_min
+    assert len(tier.reports) == 2
+
+
+def test_fleet_mean_preserving_and_deterministic():
+    fleet = DeviceFleet(GRADES["Low"], 4000, seed=9)
+    s = fleet.run_round(0)
+    mean_dur = sum(GRADES["Low"].cost(st).duration_min for st in Stage)
+    assert s.total_duration_min.mean() == pytest.approx(mean_dur, rel=0.02)
+    # Same seed, fresh fleet -> identical draws (composition-independent).
+    again = DeviceFleet(GRADES["Low"], 4000, seed=9).run_round(0)
+    np.testing.assert_array_equal(s.comm_kb, again.comm_kb)
+
+
+def test_fleet_matches_grade_ordering():
+    hi = DeviceFleet(GRADES["High"], 256, seed=1).run_round(0)
+    lo = DeviceFleet(GRADES["Low"], 256, seed=1).run_round(0)
+    assert hi.total_power_mah.mean() < lo.total_power_mah.mean()
+    assert hi.arrival_offsets_s().mean() < lo.arrival_offsets_s().mean()
+
+
+def test_fleet_checkpoint_resumes_streams():
+    fleet = DeviceFleet(GRADES["High"], 8, seed=2)
+    fleet.run_round(0)
+    state = fleet.state_dict()
+    expect = fleet.run_round(1)
+    restored = DeviceFleet(GRADES["High"], 8, seed=2)
+    restored.load_state_dict(state)
+    got = restored.run_round(1)
+    np.testing.assert_array_equal(expect.stage_duration_min,
+                                  got.stage_duration_min)
+
+
+def test_fleet_restore_into_fresh_lazily_grown_tier():
+    """DeviceTier builds its fleet empty and grows it on demand: restoring a
+    checkpoint into a *fresh* tier must adopt the saved layout, not require
+    the restorer to pre-size the fleet."""
+    local, params, batches, _ = _ctr_setup()
+    tier = DeviceTier(local, GRADES["High"], seed=4)
+    tier.sample_round(np.arange(6), 0)  # grows the fleet to 6
+    state = tier.fleet.state_dict()
+    expect = tier.sample_round(np.arange(6), 1)
+    fresh = DeviceTier(local, GRADES["High"], seed=4)  # fleet size 0
+    fresh.fleet.load_state_dict(state)
+    got = fresh.sample_round(np.arange(6), 1)
+    np.testing.assert_array_equal(expect.stage_duration_min,
+                                  got.stage_duration_min)
+    with pytest.raises(ValueError):  # wrong seed -> streams would diverge
+        DeviceTier(local, GRADES["High"], seed=5).fleet.load_state_dict(state)
+
+
+# --------------------------------------------------------------------------- #
+# DeviceTier — vmapped cohorts reproduce the per-device loop
+# --------------------------------------------------------------------------- #
+def test_cohort_matches_per_device_loop():
+    local, params, batches, _ = _ctr_setup(n_clients=6)
+    tier = DeviceTier(local, GRADES["High"], dtype=jnp.bfloat16)
+    keys = jax.random.split(jax.random.PRNGKey(3), 6)
+    stacked, _ = tier.run_cohort(params, batches, keys)
+    for j in range(6):
+        single, _, _ = tier.run_device(
+            j, params, jax.tree.map(lambda x: x[j], batches), keys[j], 0)
+        for a, b in zip(jax.tree.leaves(
+                jax.tree.map(lambda x: x[j], stacked)),
+                jax.tree.leaves(single)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-2, rtol=2e-2)
+
+
+# --------------------------------------------------------------------------- #
+# HybridSimulation — arrival-time contract with DeviceFlow
+# --------------------------------------------------------------------------- #
+def test_hybrid_round_derives_arrivals_and_stamps_created_t():
+    local, params, batches, counts = _ctr_setup()
+    deliveries = []
+    flow = DeviceFlow(deliveries.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    sim = HybridSimulation(LogicalTier(local, cohort_size=8),
+                           DeviceTier(local, GRADES["High"], cohort_size=4),
+                           deviceflow=flow)
+    out = sim.run_round(
+        task_id=0, round_idx=0, global_params=params, client_batches=batches,
+        num_samples=counts, num_logical=8, rng=jax.random.PRNGKey(1),
+        benchmark_devices=2)
+    assert out.arrival_times is not None and len(out.arrival_times) == 12
+    assert (out.arrival_times > 0).all()
+    assert len(deliveries) == 12
+    for d in deliveries:
+        assert d.message.created_t > 0.0  # stamped at submit time
+        assert d.t >= d.message.created_t - 1e-9
+    assert len(out.reports) == 2 and len(sim.device.reports) == 2
+
+
+def test_hybrid_round_respects_caller_arrival_times():
+    local, params, batches, counts = _ctr_setup()
+    svc = AggregationService(
+        ctr_lib.lr_init(jax.random.PRNGKey(0), 16),
+        trigger=SampleThresholdTrigger(int(counts.sum())))
+    flow = DeviceFlow(svc)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    sim = HybridSimulation(LogicalTier(local, cohort_size=8),
+                           DeviceTier(local, GRADES["High"]),
+                           deviceflow=flow)
+    ts = np.linspace(5.0, 16.0, 12)
+    out = sim.run_round(
+        task_id=0, round_idx=0, global_params=params, client_batches=batches,
+        num_samples=counts, num_logical=6, rng=jax.random.PRNGKey(1),
+        arrival_times=ts)
+    np.testing.assert_array_equal(out.arrival_times, ts)
+    assert len(svc.history) == 1
+    # Latency accounting sees the stamps (realtime dispatch -> ~0 queuing).
+    assert svc.history[0].mean_latency_s == pytest.approx(0.0, abs=1e-9)
+    assert flow.conservation_ok(0)
+
+
+def test_hybrid_round_all_logical_still_gets_arrivals():
+    local, params, batches, counts = _ctr_setup()
+    got = []
+    flow = DeviceFlow(got.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    sim = HybridSimulation(LogicalTier(local, cohort_size=8),
+                           DeviceTier(local, GRADES["High"]),
+                           deviceflow=flow)
+    out = sim.run_round(
+        task_id=0, round_idx=0, global_params=params, client_batches=batches,
+        num_samples=counts, num_logical=12, rng=jax.random.PRNGKey(1))
+    assert out.num_physical == 0
+    assert out.arrival_times is not None and (out.arrival_times > 0).all()
+    assert len(got) == 12
+
+
+# --------------------------------------------------------------------------- #
+# DeviceFlow — bulk Sorter path and backlog draining
+# --------------------------------------------------------------------------- #
+def _msgs(n, task_id=0):
+    return [Message(task_id, i, 0, payload=i) for i in range(n)]
+
+
+def test_submit_many_equivalent_to_sequential_submit():
+    ts = np.array([3.0, 1.0, 2.0, 5.0, 4.0, 6.0, 8.0, 7.0, 9.0, 10.0])
+    seq_got, bulk_got = [], []
+    seq = DeviceFlow(seq_got.append, seed=5)
+    seq.register_task(0, AccumulatedStrategy(thresholds=(2, 3)))
+    order = np.argsort(ts)
+    for i in order:  # per-message submit in time order
+        seq.submit(_msgs(10)[i], t=float(ts[i]))
+    bulk = DeviceFlow(bulk_got.append, seed=5)
+    bulk.register_task(0, AccumulatedStrategy(thresholds=(2, 3)))
+    bulk.submit_many(_msgs(10), ts=ts)
+    assert [(d.t, d.message.device_id) for d in bulk_got] == \
+           [(d.t, d.message.device_id) for d in seq_got]
+    # created_t is each message's own arrival; delivery happens at the
+    # threshold-crossing message's arrival, never earlier than creation.
+    assert all(d.message.created_t == ts[d.message.device_id] for d in bulk_got)
+    assert all(d.t >= d.message.created_t for d in bulk_got)
+    assert bulk.conservation_ok(0)
+
+
+def test_submit_many_routes_multiple_tasks():
+    got = []
+    flow = DeviceFlow(got.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(2,)))
+    flow.register_task(1, AccumulatedStrategy(thresholds=(1,)))
+    msgs = _msgs(4, task_id=0) + _msgs(3, task_id=1)
+    flow.submit_many(msgs, ts=np.arange(7, dtype=float) + 1.0)
+    assert flow.conservation_ok(0) and flow.conservation_ok(1)
+    assert len(got) == 7
+
+
+def test_backlog_above_threshold_drains_fully():
+    """Regression: one-batch-per-insertion stranded bulk backlogs forever."""
+    got = []
+    flow = DeviceFlow(got.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(3,)))
+    # Simulate a bulk restore: 9 messages land on the shelf at once.
+    state = {0: {"task_id": 0, "buf": _msgs(9), "received": 9,
+                 "dispatched": 0, "dropped": 0}}
+    flow.load_state_dict(state)
+    flow.submit(Message(0, 99, 0, payload="x"), t=1.0)
+    assert len(got) == 9  # 3 batches of 3 drained, 1 message pending
+    assert len(flow.shelf(0)) == 1
+    assert flow.conservation_ok(0)
