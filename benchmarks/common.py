@@ -15,6 +15,10 @@ from repro.data.synthetic_ctr import CTRDataset, make_federated_ctr
 from repro.models import ctr as ctr_lib
 
 
+# Set by ``benchmarks.run --quick``: CI smoke mode with reduced scales.
+QUICK = False
+
+
 @dataclasses.dataclass
 class Row:
     name: str

@@ -3,7 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV (plus a trailing roofline summary
 derived from the dry-run artifacts when present).
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only fig9]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig9] [--quick]
+
+``--quick`` is the CI smoke mode: reduced device counts, restricted to the
+cohort-engine perf benchmarks (``fig8_device_tier_batched`` and
+``multi_grade_round``), and a non-zero exit when any claim row reports
+``ok=False`` — so the round-engine perf path can't silently break.
 """
 from __future__ import annotations
 
@@ -13,23 +18,35 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
+from benchmarks import common  # noqa: E402
 from benchmarks.paper_benchmarks import ALL_BENCHMARKS  # noqa: E402
+
+QUICK_BENCHMARKS = ("fig8_device_tier_batched", "multi_grade_round")
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: reduced scales, perf benchmarks only, "
+                         "fail on ok=False claim rows")
     args = ap.parse_args(argv)
+    common.QUICK = args.quick
 
     print("name,us_per_call,derived")
     failures = 0
     for bench in ALL_BENCHMARKS:
         if args.only and args.only not in bench.__name__:
             continue
+        if args.quick and not args.only and \
+                bench.__name__ not in QUICK_BENCHMARKS:
+            continue
         try:
             for row in bench():
                 print(row.csv(), flush=True)
+                if args.quick and "ok=False" in row.derived:
+                    failures += 1
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{bench.__name__},0.0,ERROR={type(e).__name__}:{e}",

@@ -1,10 +1,11 @@
-"""Quickstart: the SimDC platform in ~60 lines.
+"""Quickstart: the SimDC platform in ~70 lines.
 
-Simulates a small federated CTR task end-to-end: hybrid allocation decides
-the logical/physical split, both tiers run client-local training in batched
-(vmapped) cohorts, the device fleet's sampled Table-I round durations become
-per-message arrival times through DeviceFlow, and the cloud aggregates with
-FedAvg while tracking real queuing latency.
+Simulates a small two-grade federated CTR task end-to-end: fleet-calibrated
+runtimes (no hand-coded constants) drive the hybrid allocator, a ``RoundPlan``
+maps each grade's split onto its own logical/device cohorts, the per-grade
+fleet-sampled Table-I round durations become per-message arrival times through
+DeviceFlow, and the cloud aggregates with FedAvg while tracking real queuing
+latency.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,65 +14,83 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    AccumulatedStrategy, AggregationService, DeviceFlow, GradeRuntime,
-    GradeSpec, SampleThresholdTrigger, solve_allocation,
+    AccumulatedStrategy, AggregationService, DeviceFlow, GradeSpec, RoundPlan,
+    RuntimeCalibrator, SampleThresholdTrigger, solve_allocation,
 )
-from repro.core.devicemodel import GRADES
+from repro.core.devicemodel import GRADES, DeviceFleet
 from repro.core.simulation import DeviceTier, HybridSimulation, LogicalTier
 from repro.data.synthetic_ctr import make_federated_ctr
 from repro.models import ctr
 
-N_DEVICES, RECORDS, DIM, ROUNDS = 24, 16, 64, 4
+N_HIGH, N_LOW, RECORDS, DIM, ROUNDS = 16, 8, 16, 64, 4
+specs = [
+    GradeSpec("High", N_HIGH, benchmarking_devices=1, logical_bundles=8,
+              bundles_per_device=4, physical_devices=8),
+    GradeSpec("Low", N_LOW, benchmarking_devices=1, logical_bundles=16,
+              bundles_per_device=2, physical_devices=2),
+]
 
-# 1. Hybrid allocation (paper Eq. 1): how many devices run on each tier?
-spec = GradeSpec("High", N_DEVICES, logical_bundles=64,
-                 bundles_per_device=4, physical_devices=4)
-rt = GradeRuntime(alpha=16.2, beta=21.6, lam=15.0)  # Table-I calibrated
-alloc = solve_allocation([spec], [rt])
-print(f"allocation: {alloc.per_grade[0].logical_devices} logical / "
-      f"{alloc.per_grade[0].physical_devices} physical, "
-      f"makespan {alloc.makespan:.1f}s")
+# 1. Calibrate per-grade runtimes from measured fleet rounds (paper §IV.C):
+#    no hand-coded GradeRuntime constants — the allocator runs on data.
+cal = RuntimeCalibrator()
+for g in ("High", "Low"):
+    probe = DeviceFleet(GRADES[g], 64, seed=7)  # pre-measurement fleet
+    for r in range(3):
+        cal.observe_fleet(probe.run_round(r))
 
-# 2. Data + client-local training operator.
-data = make_federated_ctr(num_devices=N_DEVICES, records_per_device=RECORDS,
-                          dim=DIM, seed=0)
+# 2. Hybrid allocation (paper Eq. 1): per-grade logical/physical split.
+alloc = solve_allocation(specs, cal.runtimes_for(specs))
+plan = RoundPlan.from_allocation(alloc, specs)
+for e in plan.entries:
+    print(f"allocation[{e.grade}]: {e.num_logical} logical / "
+          f"{e.num_physical} physical / {e.num_benchmarking} benchmarking")
+print(f"estimated makespan {alloc.makespan:.1f}s")
+
+# 3. Data + client-local training operator (shared across grades).
 local_train = ctr.make_local_train_fn(lr=1e-3, epochs=10)
 params = ctr.lr_init(jax.random.PRNGKey(0), DIM)
+grade_batches, grade_counts = {}, {}
+for i, spec in enumerate(specs):
+    data = make_federated_ctr(num_devices=spec.num_devices,
+                              records_per_device=RECORDS, dim=DIM, seed=i)
+    X, Y, counts = data.stacked_shards(np.arange(spec.num_devices), RECORDS)
+    mask = (np.arange(RECORDS)[None] < counts[:, None]).astype(np.float32)
+    grade_batches[spec.grade] = {"x": jnp.asarray(X), "y": jnp.asarray(Y),
+                                 "mask": jnp.asarray(mask)}
+    grade_counts[spec.grade] = counts
 
-# 3. Cloud service behind DeviceFlow (real-time dispatch here).
-svc = AggregationService(params,
-                         trigger=SampleThresholdTrigger(N_DEVICES * RECORDS))
+# 4. Cloud service behind DeviceFlow (real-time dispatch here).
+svc = AggregationService(
+    params, trigger=SampleThresholdTrigger((N_HIGH + N_LOW) * RECORDS // 2))
 flow = DeviceFlow(svc)
 flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
 
-# 4. Hybrid simulation rounds.
-sim = HybridSimulation(LogicalTier(local_train, cohort_size=16),
-                       DeviceTier(local_train, GRADES["High"]),
-                       deviceflow=flow)
-X, Y, counts = data.stacked_shards(np.arange(N_DEVICES), RECORDS)
-mask = (np.arange(RECORDS)[None] < counts[:, None]).astype(np.float32)
-test = make_federated_ctr(num_devices=64, dim=DIM, seed=1)
+# 5. Grade-partitioned hybrid rounds: one DeviceTier+fleet per grade; every
+#    round's fleet samples feed the calibrator, re-measuring the runtimes.
+sim = HybridSimulation(
+    LogicalTier(local_train, cohort_size=16),
+    tiers={g: DeviceTier(local_train, GRADES[g]) for g in ("High", "Low")},
+    deviceflow=flow)
+test = make_federated_ctr(num_devices=64, dim=DIM, seed=9)
 
 for rnd in range(ROUNDS):
-    outcome = sim.run_round(
+    outcome = sim.run_plan_round(
         task_id=0, round_idx=rnd, global_params=svc.global_params,
-        client_batches={"x": jnp.asarray(X), "y": jnp.asarray(Y),
-                        "mask": jnp.asarray(mask)},
-        num_samples=counts,
-        num_logical=alloc.per_grade[0].logical_devices,
-        rng=jax.random.PRNGKey(rnd), benchmark_devices=1,
-    )
+        plan=plan, grade_batches=grade_batches,
+        grade_num_samples=grade_counts, rng=jax.random.PRNGKey(rnd),
+        calibrator=cal)
     acc = float(ctr.accuracy(svc.global_params,
                              jnp.asarray(test.features),
                              jnp.asarray(test.labels)))
-    last_arrival = float(np.max(outcome.arrival_times))
+    per_grade = " ".join(f"{g}={b.makespan_s:.0f}s"
+                         for g, b in outcome.per_grade.items())
     print(f"round {rnd}: aggregations={len(svc.history)} test_acc={acc:.4f} "
-          f"round_end_t={last_arrival:.1f}s")
+          f"makespan[{per_grade}] round_end_t={outcome.makespan_s:.1f}s")
 
-if sim.device.reports:
-    print("benchmark-device report:",
-          f"{sim.device.reports[0].total_power_mah:.2f} mAh,"
-          f" {sim.device.reports[0].total_duration_min:.2f} min")
-else:
-    print("(allocation placed every device on the logical tier; "
-          "no physical benchmarking ran)")
+rts = cal.runtimes_for(specs)
+print("re-measured runtimes:",
+      "; ".join(f"{s.grade}: alpha={r.alpha:.1f} beta={r.beta:.1f} "
+                f"lam={r.lam:.1f}" for s, r in zip(specs, rts)))
+for rep in sim.tiers["High"].reports[:1]:
+    print(f"benchmark-device report ({rep.grade}): "
+          f"{rep.total_power_mah:.2f} mAh, {rep.total_duration_min:.2f} min")

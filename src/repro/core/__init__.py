@@ -6,6 +6,11 @@ from repro.core.allocation import (
     solve_allocation,
     solve_allocation_bruteforce,
 )
+from repro.core.calibration import (
+    RuntimeCalibrator,
+    calibrate_runtimes,
+    table1_runtime,
+)
 from repro.core.deviceflow import Delivery, DeviceFlow, Message, Shelf, VirtualClock
 from repro.core.federation import (
     AggregationService,
@@ -30,13 +35,25 @@ from repro.core.strategies import (
     TimePointStrategy,
     discretize_curve,
 )
+from repro.core.simulation import (
+    DeviceTier,
+    FederatedRoundOutcome,
+    GradePlanEntry,
+    GradeRoundBreakdown,
+    HybridSimulation,
+    LogicalTier,
+    RoundPlan,
+)
 from repro.core.task import GradeSpec, OperatorFlow, Task, TaskQueue, register_operator
 from repro.core.traffic_curves import TrafficCurve, right_tailed_normal, table2_curves
 
 __all__ = [
     "AllocationResult", "GradeRuntime", "fixed_ratio_allocation",
     "solve_allocation", "solve_allocation_bruteforce",
+    "RuntimeCalibrator", "calibrate_runtimes", "table1_runtime",
     "Delivery", "DeviceFlow", "Message", "Shelf", "VirtualClock",
+    "DeviceTier", "FederatedRoundOutcome", "GradePlanEntry",
+    "GradeRoundBreakdown", "HybridSimulation", "LogicalTier", "RoundPlan",
     "AggregationService", "ClientCountTrigger", "SampleThresholdTrigger",
     "ScheduledTrigger", "fedavg_delta", "polynomial_staleness", "weighted_average",
     "ResourceManager", "ResourcePool", "TaskManager", "TaskRunner", "TaskScheduler",

@@ -82,7 +82,7 @@ def _physical_time(y: int, spec: GradeSpec, rt: GradeRuntime) -> float:
 
 
 def _grade_makespan(x: int, spec: GradeSpec, rt: GradeRuntime) -> float:
-    n = spec.num_devices - spec.benchmarking_devices
+    n = spec.allocatable_devices
     return max(_logical_time(x, spec, rt), _physical_time(n - x, spec, rt))
 
 
@@ -93,7 +93,7 @@ def _min_single_grade(spec: GradeSpec, rt: GradeRuntime) -> tuple[float, int]:
     nonincreasing, so binary-search the largest x where physical >= logical and
     inspect the boundary pair.
     """
-    n = spec.num_devices - spec.benchmarking_devices
+    n = spec.allocatable_devices
     if n == 0:
         return 0.0, 0
     lo, hi = 0, n
@@ -115,7 +115,7 @@ def _min_single_grade(spec: GradeSpec, rt: GradeRuntime) -> tuple[float, int]:
 
 def _max_x_within(spec: GradeSpec, rt: GradeRuntime, budget: float) -> int:
     """Largest feasible x_i with both tier times <= budget (secondary obj)."""
-    n = spec.num_devices - spec.benchmarking_devices
+    n = spec.allocatable_devices
     lo, hi = -1, n
     # logical(x) nondecreasing: binary search largest x with logical <= budget.
     while lo < hi:
@@ -164,7 +164,7 @@ def solve_allocation(
         )
     out = []
     for (t_i, x_i), spec, rt in zip(mins, specs, runtimes):
-        n = spec.num_devices - spec.benchmarking_devices
+        n = spec.allocatable_devices
         x = _max_x_within(spec, rt, makespan) if prefer_logical else x_i
         out.append(
             GradeAllocation(
@@ -189,7 +189,7 @@ def solve_allocation_bruteforce(
     makespan = 0.0
     per_grade_best: list[tuple[float, int]] = []
     for spec, rt in zip(specs, runtimes):
-        n = spec.num_devices - spec.benchmarking_devices
+        n = spec.allocatable_devices
         best = min(
             ((_grade_makespan(x, spec, rt), x) for x in range(n + 1)),
             key=lambda p: (p[0], -p[1] if prefer_logical else p[1]),
@@ -199,7 +199,7 @@ def solve_allocation_bruteforce(
     if math.isinf(makespan):
         raise ValueError("infeasible")
     for (t_i, _), spec, rt in zip(per_grade_best, specs, runtimes):
-        n = spec.num_devices - spec.benchmarking_devices
+        n = spec.allocatable_devices
         feas = [
             x for x in range(n + 1) if _grade_makespan(x, spec, rt) <= makespan + 1e-12
         ]
@@ -226,7 +226,7 @@ def fixed_ratio_allocation(
         raise ValueError("logical_fraction in [0, 1]")
     out = []
     for spec, rt in zip(specs, runtimes):
-        n = spec.num_devices - spec.benchmarking_devices
+        n = spec.allocatable_devices
         x = round(n * logical_fraction)
         out.append(
             GradeAllocation(

@@ -257,6 +257,11 @@ class FleetRoundSample:
         contract consumed by DeviceFlow (message ``created_t`` stamps)."""
         return self.total_duration_min * 60.0
 
+    def stage_duration_s(self, stage: Stage) -> np.ndarray:
+        """Per-device duration of one Table-I stage in seconds (the
+        measurement feed of ``calibration.RuntimeCalibrator``)."""
+        return self.stage_duration_min[:, list(Stage).index(stage)] * 60.0
+
     def report(self, i: int) -> RoundReport:
         """Materialize row ``i`` as a classic per-device ``RoundReport``."""
         stages = list(Stage)

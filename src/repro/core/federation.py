@@ -16,6 +16,7 @@ exposes arrival times.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable
 
 import jax
@@ -113,6 +114,11 @@ class AggregationService:
                 w *= self.staleness_discount(staleness)
             updates.append(m.payload)
             weights.append(w)
+        if sum(weights) <= 0.0:
+            # An aggressive staleness_discount can zero every pending weight;
+            # fall back to uniform weights instead of crashing the delivery
+            # callback mid-flow.
+            weights = [1.0] * len(updates)
         self.global_params = fedavg_delta(
             self.global_params, updates, weights, server_lr=self.server_lr
         )
@@ -179,7 +185,13 @@ class ScheduledTrigger(Trigger):
 
     def should_fire_on_tick(self, svc: AggregationService, t: float) -> bool:
         if t - self._last >= self.period - 1e-9 and svc.pending_clients > 0:
-            self._last = t
+            # Snap forward on the fixed grid rather than re-anchoring to the
+            # tick's arrival time — aggregation stays on the paper's
+            # "scheduled times" instead of drifting by the tick jitter.  The
+            # max(1, ...) guards the fire-condition tolerance: a tick landing
+            # a hair below the grid point must still advance the grid.
+            self._last += self.period * max(1, math.floor(
+                (t - self._last + 1e-9) / self.period))
             return True
         return False
 

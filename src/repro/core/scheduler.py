@@ -126,6 +126,12 @@ class TaskScheduler:
 class TaskRunner:
     """Executes admitted tasks against the hybrid tiers.
 
+    ``runtimes`` supplies the per-grade ``GradeRuntime``s the allocator runs
+    on: either a callable ``task -> list[GradeRuntime]`` or any object with a
+    ``for_task`` method — e.g. a ``calibration.RuntimeCalibrator``, so the
+    scheduler allocates on *measured* fleet durations instead of hand-coded
+    constants.
+
     ``tier_runners`` maps tier name ("logical"/"device") to a callable
     ``run(task, grade, num_devices, round_idx) -> list[result]``; the runner
     stays agnostic of what the tiers compute (operator flows are resolved by
@@ -141,7 +147,8 @@ class TaskRunner:
         on_round_complete: Callable[[Task, int], None] | None = None,
     ):
         self.resources = resources
-        self.runtimes = runtimes
+        self.runtimes = (runtimes.for_task
+                         if hasattr(runtimes, "for_task") else runtimes)
         self.tier_runners = tier_runners
         self.on_round_complete = on_round_complete
         self.records: dict[int, ScheduledTask] = {}

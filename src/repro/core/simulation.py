@@ -1,13 +1,12 @@
-"""Logical & Device simulation tiers (paper §III.B, §IV.A).
+"""Grade-partitioned logical & device simulation tiers (paper §III.B, §IV).
 
 *Logical Simulation* in the paper launches Ray actors on k8s nodes, each actor
 sequentially simulating several devices.  The TPU-native adaptation is a
 **vectorized client engine**: client-local training is expressed as a pure
 function of (client params, client batch) and executed for a whole *cohort* of
 clients at once via ``jax.vmap`` — sharded over the mesh ``data`` axis with
-``shard_map`` when a mesh is supplied.  One TPU step simulates hundreds of
-devices; cohorts iterate to reach arbitrary population sizes (the paper's
-"each actor sequentially simulates multiple devices").
+``shard_map`` when a mesh is supplied (both tiers support the mesh path, so
+device cohorts shard across hosts exactly like logical ones).
 
 *Device Simulation* is backed by the calibrated device models of
 ``core.devicemodel`` (see DESIGN.md §2 for why physical phones cannot exist
@@ -15,26 +14,42 @@ here) and — crucially for the Fig. 6 reproduction — executes the *same
 operator flow through a numerically different backend* (bf16 accumulation vs
 f32), mirroring the paper's PyMNN-vs-C++-MNN operator discrepancy.
 
-**Batched round engine.**  Both tiers execute whole cohorts per dispatch:
-``DeviceTier.run_cohort`` vmaps the (bf16-backend) local step over a chunk of
-devices, so a 1k-device round costs a handful of XLA dispatches instead of 1k
-``jax.jit`` calls; the behavioral side is one vectorized ``DeviceFleet``
-sample of all devices × 5 Table-I stages.  ``HybridSimulation.run_round``
-derives per-device arrival times from those sampled round durations when the
-caller doesn't pass ``arrival_times``, stamps them into ``Message.created_t``,
-and feeds DeviceFlow through the bulk ``submit_many`` Sorter path — the
-arrival-time contract between the tiers and DeviceFlow.
+**Grade-partitioned round engine.**  The §IV.B allocator splits *each device
+grade* between the tiers; the engine mirrors that shape.  A ``RoundPlan``
+consumes an ``AllocationResult`` directly — one ``GradePlanEntry`` per grade
+carrying the allocator's (x_i logical, y_i physical, q_i benchmarking) split —
+and ``HybridSimulation`` holds one ``DeviceTier`` (with its own ``DeviceFleet``)
+*per grade*::
+
+    sim = HybridSimulation(logical, tiers={"High": ..., "Low": ...},
+                           deviceflow=flow)
+    plan = RoundPlan.from_allocation(solve_allocation(specs, runtimes), specs)
+    outcome = sim.run_plan_round(task_id, rnd, params, plan,
+                                 grade_batches, grade_num_samples, rng)
+
+``run_plan_round`` executes each grade's logical and device cohorts (one
+vmapped XLA dispatch per chunk), samples each grade's fleet once (all devices
+× 5 Table-I stages), merges the per-grade sampled durations into DeviceFlow
+arrival times through the bulk ``submit_many`` Sorter path, materializes
+``RoundReport``s for exactly the q_i benchmarking devices the allocator
+excluded, and reports a per-grade makespan breakdown in
+``FederatedRoundOutcome.per_grade``.  Passing a ``RuntimeCalibrator`` feeds
+the sampled durations back into allocation (measured, not hand-coded,
+``GradeRuntime``s — the paper's calibration loop).
+
+The legacy single-grade ``run_round(..., num_logical=...)`` path is kept as a
+thin wrapper over the same per-grade execution helper.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.allocation import AllocationResult
 from repro.core.deviceflow import DeviceFlow, Message
 from repro.core.devicemodel import (
     DeviceFleet,
@@ -42,6 +57,7 @@ from repro.core.devicemodel import (
     FleetRoundSample,
     RoundReport,
 )
+from repro.core.task import GradeSpec
 
 Params = Any
 Batch = Any
@@ -61,6 +77,21 @@ class CohortResult:
 
 def _stack_params(params: Params, n: int) -> Params:
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), params)
+
+
+def _shard_over_data(fn, mesh, data_axis: str, n_in: int, n_out: int):
+    """Wrap a vmapped fn so every arg/output shards over the mesh data axis."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    spec = P(data_axis)
+    return shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(spec,) * n_in,
+        out_specs=(spec,) * n_out if n_out > 1 else spec,
+        check_rep=False,
+    )
 
 
 class LogicalTier:
@@ -85,17 +116,7 @@ class LogicalTier:
     def _build(self):
         vmapped = jax.vmap(self.local_train, in_axes=(0, 0, 0))
         if self.mesh is not None:
-            from jax.sharding import PartitionSpec as P
-            from jax.experimental.shard_map import shard_map
-
-            spec = P(self.data_axis)
-            vmapped = shard_map(
-                vmapped,
-                mesh=self.mesh,
-                in_specs=(spec, spec, spec),
-                out_specs=(spec, spec),
-                check_rep=False,
-            )
+            vmapped = _shard_over_data(vmapped, self.mesh, self.data_axis, 3, 2)
         return jax.jit(vmapped)
 
     def run_cohort(
@@ -118,7 +139,7 @@ class LogicalTier:
 
 
 class DeviceTier:
-    """Calibrated device-simulation tier.
+    """Calibrated device-simulation tier for ONE device grade.
 
     Runs the same local computation through a numerically distinct backend
     dtype (the paper's operator discrepancy) and charges virtual time/energy
@@ -127,8 +148,10 @@ class DeviceTier:
     ``DeviceModel`` per call would restart every device's jitter every round).
 
     ``run_cohort`` is the batched execution path: one vmapped XLA dispatch
-    simulates a whole chunk of devices; ``run_device`` remains as the
-    single-device view (same numerics, same fleet).
+    simulates a whole chunk of devices, sharded over the mesh ``data`` axis
+    with ``shard_map`` when a ``mesh`` is supplied (same contract as
+    ``LogicalTier``); ``run_device`` remains as the single-device view (same
+    numerics, same fleet).
     """
 
     def __init__(
@@ -141,6 +164,8 @@ class DeviceTier:
         train_cost_scale: float = 1.0,
         cohort_size: int = 256,
         jitter: float = 0.08,
+        mesh: jax.sharding.Mesh | None = None,
+        data_axis: str = "data",
     ):
         self.grade = grade
         self.dtype = dtype
@@ -148,8 +173,10 @@ class DeviceTier:
         self.train_cost_scale = train_cost_scale
         self.cohort_size = cohort_size
         self.local_train = local_train
+        self.mesh = mesh
+        self.data_axis = data_axis
         self._jit = jax.jit(self._device_step)
-        self._vjit = jax.jit(self._cohort_step)
+        self._vjit = None
         self.fleet = DeviceFleet(grade, 0, seed=seed, jitter=jitter)
         self.reports: list[RoundReport] = []
 
@@ -170,12 +197,16 @@ class DeviceTier:
         )
         return new_p, metrics
 
-    def _cohort_step(self, global_params: Params, batches: Batch,
-                     rngs: jax.Array):
-        n = jax.tree.leaves(batches)[0].shape[0]
-        stacked = _stack_params(global_params, n)
-        return jax.vmap(self._device_step, in_axes=(0, 0, 0))(
-            stacked, batches, rngs)
+    def _build_cohort(self):
+        vmapped = jax.vmap(self._device_step, in_axes=(0, 0, 0))
+        if self.mesh is not None:
+            vmapped = _shard_over_data(vmapped, self.mesh, self.data_axis, 3, 2)
+
+        def cohort(global_params, batches, rngs):
+            n = jax.tree.leaves(batches)[0].shape[0]
+            return vmapped(_stack_params(global_params, n), batches, rngs)
+
+        return jax.jit(cohort)
 
     def run_cohort(
         self,
@@ -184,6 +215,8 @@ class DeviceTier:
         rngs: jax.Array,  # (cohort, key)
     ) -> tuple[Params, dict]:
         """One XLA dispatch simulating a whole device cohort (bf16 backend)."""
+        if self._vjit is None:
+            self._vjit = self._build_cohort()
         return self._vjit(global_params, batches, rngs)
 
     def sample_round(self, device_ids: np.ndarray, round_idx: int
@@ -212,6 +245,90 @@ class DeviceTier:
         return new_p, metrics, report
 
 
+# --------------------------------------------------------------------------- #
+# Round plans — the allocator's split as an executable object
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GradePlanEntry:
+    """One grade's share of a round: the allocator's (x_i, y_i, q_i)."""
+
+    grade: str
+    num_logical: int  # x_i — devices emulated on the logical tier
+    num_physical: int  # N_i - q_i - x_i — devices on the device tier
+    num_benchmarking: int = 0  # q_i — measured devices (device tier, reports)
+
+    def __post_init__(self):
+        if min(self.num_logical, self.num_physical, self.num_benchmarking) < 0:
+            raise ValueError("plan entry counts must be non-negative")
+
+    @property
+    def num_devices(self) -> int:
+        """Total devices of this grade simulated in the round (x + y + q)."""
+        return self.num_logical + self.num_physical + self.num_benchmarking
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Executable per-grade split of one federated round.
+
+    Built directly from the §IV.B allocator's output — ``from_allocation``
+    carries each grade's benchmarking count q_i over from its ``GradeSpec``,
+    so the devices producing ``RoundReport``s are exactly the ones the
+    allocator excluded from the split.
+    """
+
+    entries: tuple[GradePlanEntry, ...]
+
+    def __post_init__(self):
+        seen = set()
+        for e in self.entries:
+            if e.grade in seen:
+                raise ValueError(f"duplicate grade {e.grade!r} in plan")
+            seen.add(e.grade)
+
+    @classmethod
+    def from_allocation(cls, result: AllocationResult,
+                        specs: Sequence[GradeSpec]) -> "RoundPlan":
+        by_grade = {s.grade: s for s in specs}
+        entries = []
+        for ga in result.per_grade:
+            spec = by_grade.get(ga.grade)
+            entries.append(GradePlanEntry(
+                grade=ga.grade,
+                num_logical=ga.logical_devices,
+                num_physical=ga.physical_devices,
+                num_benchmarking=(spec.benchmarking_devices
+                                  if spec is not None else 0),
+            ))
+        return cls(tuple(entries))
+
+    def entry(self, grade: str) -> GradePlanEntry:
+        for e in self.entries:
+            if e.grade == grade:
+                return e
+        raise KeyError(f"grade {grade!r} not in plan")
+
+    @property
+    def grades(self) -> tuple[str, ...]:
+        return tuple(e.grade for e in self.entries)
+
+    @property
+    def total_devices(self) -> int:
+        return sum(e.num_devices for e in self.entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradeRoundBreakdown:
+    """Per-grade outcome of one round (makespan accounting, paper Fig. 7)."""
+
+    grade: str
+    num_logical: int
+    num_physical: int
+    num_benchmarking: int
+    makespan_s: float  # slowest sampled device-round completion of the grade
+    mean_duration_s: float  # mean sampled round duration across the grade
+
+
 @dataclasses.dataclass
 class FederatedRoundOutcome:
     num_logical: int
@@ -219,54 +336,97 @@ class FederatedRoundOutcome:
     messages: list[Message]
     reports: list[RoundReport]
     arrival_times: np.ndarray | None = None  # per-message virtual times
+    per_grade: dict[str, GradeRoundBreakdown] = dataclasses.field(
+        default_factory=dict)
+    client_metrics: list = dataclasses.field(default_factory=list)
+
+    @property
+    def makespan_s(self) -> float:
+        """Round makespan: the slowest grade's slowest sampled device."""
+        return max((b.makespan_s for b in self.per_grade.values()), default=0.0)
 
 
 class HybridSimulation:
     """Drives one federated round across both tiers and feeds DeviceFlow.
 
-    This is the composition point of the paper: allocation decides the split,
-    both tiers execute the same operator flow, results become DeviceFlow
-    messages whose *dispatch* to the cloud follows the task's traffic strategy.
+    This is the composition point of the paper: allocation decides the
+    per-grade split, every grade's tiers execute the same operator flow, and
+    results become DeviceFlow messages whose *dispatch* to the cloud follows
+    the task's traffic strategy.
+
+    ``tiers`` maps grade name to that grade's ``DeviceTier`` (each with its
+    own fleet).  A single ``DeviceTier`` may still be passed positionally for
+    the one-grade case; it is wrapped as ``{tier.grade.name: tier}`` and
+    remains reachable as ``sim.device``.
     """
 
     def __init__(
         self,
         logical: LogicalTier,
-        device: DeviceTier,
+        device: "DeviceTier | Mapping[str, DeviceTier] | None" = None,
         deviceflow: DeviceFlow | None = None,
+        *,
+        tiers: Mapping[str, DeviceTier] | None = None,
     ):
         self.logical = logical
-        self.device = device
+        if tiers is not None and device is not None:
+            raise ValueError("pass either device or tiers, not both")
+        if tiers is None:
+            if device is None:
+                raise ValueError(
+                    "pass a DeviceTier or tiers={grade: DeviceTier}")
+            tiers = (device if not isinstance(device, DeviceTier)
+                     else {device.grade.name: device})
+        self.tiers: dict[str, DeviceTier] = dict(tiers)
+        if not self.tiers:
+            raise ValueError("at least one device tier is required")
         self.deviceflow = deviceflow
 
-    def run_round(
+    @property
+    def device(self) -> DeviceTier:
+        """Legacy single-grade view of ``tiers``."""
+        if len(self.tiers) != 1:
+            raise ValueError(
+                f"{len(self.tiers)} device tiers configured; "
+                "use sim.tiers[grade]")
+        return next(iter(self.tiers.values()))
+
+    # -- shared per-grade execution ----------------------------------------
+    def _run_split(
         self,
+        tier: DeviceTier,
         task_id: int,
         round_idx: int,
         global_params: Params,
-        client_batches: Batch,  # leaves (num_clients, ...)
-        num_samples: np.ndarray,  # (num_clients,)
+        client_batches: Batch,
+        num_samples: np.ndarray,
         num_logical: int,
         rng: jax.Array,
         *,
-        benchmark_devices: int = 0,
-        arrival_times: np.ndarray | None = None,
-    ) -> FederatedRoundOutcome:
+        id_offset: int = 0,
+        metrics_out: list | None = None,
+    ) -> tuple[list[Message], jax.Array]:
+        """Run one grade's split: [0, num_logical) through the logical tier,
+        the rest through ``tier``'s device backend.  Returns the emitted
+        messages (``device_id`` offset by ``id_offset``) and the advanced rng.
+        """
         n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
         if not 0 <= num_logical <= n_total:
             raise ValueError("num_logical out of range")
         take = lambda tree, sl: jax.tree.map(lambda x: x[sl], tree)
         msgs: list[Message] = []
-        reports: list[RoundReport] = []
 
         def emit(host_params, lo, hi):
+            # Flatten once per chunk; per-device payloads are then cheap
+            # leaf-index views instead of one jax.tree.map per message.
+            leaves, treedef = jax.tree.flatten(host_params)
             for j in range(hi - lo):
                 msgs.append(
                     Message(
                         task_id=task_id,
-                        device_id=lo + j,
+                        device_id=id_offset + lo + j,
                         round_idx=round_idx,
-                        payload=jax.tree.map(lambda x: x[j], host_params),
+                        payload=treedef.unflatten([leaf[j] for leaf in leaves]),
                         num_samples=int(num_samples[lo + j]),
                     )
                 )
@@ -282,6 +442,8 @@ class HybridSimulation:
                 sub,
                 num_samples[idx:hi],
             )
+            if metrics_out is not None:
+                metrics_out.append(res.metrics)
             emit(jax.device_get(res.params), idx, hi)
             idx = hi
 
@@ -289,31 +451,185 @@ class HybridSimulation:
         # vmapped dispatch per chunk instead of one jit call per device.
         idx = num_logical
         while idx < n_total:
-            hi = min(idx + self.device.cohort_size, n_total)
+            hi = min(idx + tier.cohort_size, n_total)
             rng, sub = jax.random.split(rng)
-            new_p, _ = self.device.run_cohort(
+            new_p, dev_metrics = tier.run_cohort(
                 global_params,
                 take(client_batches, slice(idx, hi)),
                 jax.random.split(sub, hi - idx),
             )
+            if metrics_out is not None:
+                metrics_out.append(dev_metrics)
             emit(jax.device_get(new_p), idx, hi)
             idx = hi
+        return msgs, rng
+
+    # -- grade-partitioned rounds (allocator-driven) -----------------------
+    def run_plan_round(
+        self,
+        task_id: int,
+        round_idx: int,
+        global_params: Params,
+        plan: RoundPlan,
+        grade_batches: Mapping[str, Batch],  # per grade: leaves (N_i, ...)
+        grade_num_samples: Mapping[str, np.ndarray],  # per grade: (N_i,)
+        rng: jax.Array,
+        *,
+        calibrator=None,
+    ) -> FederatedRoundOutcome:
+        """Execute one allocator-planned round across every grade.
+
+        Per grade ``g``: rows ``[0, x_g)`` of ``grade_batches[g]`` run on the
+        logical tier, rows ``[x_g, x_g + y_g + q_g)`` through grade ``g``'s
+        ``DeviceTier``; the LAST ``q_g`` rows are the benchmarking devices and
+        materialize ``RoundReport``s.  Each grade's fleet is sampled once;
+        the sampled durations become DeviceFlow arrival times (merged across
+        grades) and the per-grade makespan breakdown.  ``calibrator``
+        (a ``calibration.RuntimeCalibrator``) observes every grade's sample,
+        closing the measurement loop back into ``solve_allocation``.
+        """
+        # Validate the whole plan up front: a failure mid-plan would leave
+        # earlier grades' tiers, rng, and the calibrator polluted with a
+        # half-executed round.
+        per_grade_inputs: list[tuple[GradePlanEntry, Any, np.ndarray, int]] = []
+        for entry in plan.entries:
+            if entry.grade not in self.tiers:
+                raise KeyError(
+                    f"plan contains grade {entry.grade!r} but HybridSimulation "
+                    f"has tiers for {sorted(self.tiers)}")
+            try:
+                batches = grade_batches[entry.grade]
+                n_samples = np.asarray(grade_num_samples[entry.grade])
+            except KeyError:
+                raise KeyError(
+                    f"grade_batches/grade_num_samples missing grade "
+                    f"{entry.grade!r}") from None
+            n_total = int(jax.tree.leaves(batches)[0].shape[0])
+            if n_total != entry.num_devices:
+                raise ValueError(
+                    f"grade {entry.grade!r}: batches carry {n_total} devices "
+                    f"but the plan requires {entry.num_devices} "
+                    f"(x={entry.num_logical} + y={entry.num_physical} + "
+                    f"q={entry.num_benchmarking})")
+            per_grade_inputs.append((entry, batches, n_samples, n_total))
+
+        msgs: list[Message] = []
+        reports: list[RoundReport] = []
+        arrivals: list[np.ndarray] = []
+        breakdown: dict[str, GradeRoundBreakdown] = {}
+        client_metrics: list = []
+        base = 0.0 if self.deviceflow is None else self.deviceflow.clock.now
+        offset = 0
+        for entry, batches, n_samples, n_total in per_grade_inputs:
+            tier = self.tiers[entry.grade]
+            if n_total == 0:
+                breakdown[entry.grade] = GradeRoundBreakdown(
+                    entry.grade, 0, 0, 0, 0.0, 0.0)
+                continue
+            grade_msgs, rng = self._run_split(
+                tier, task_id, round_idx, global_params, batches, n_samples,
+                entry.num_logical, rng, id_offset=offset,
+                metrics_out=client_metrics,
+            )
+            msgs.extend(grade_msgs)
+
+            # Behavioral side: one fleet sample covers the grade (sampled
+            # under grade-LOCAL ids so per-device RNG streams stay stable
+            # across rounds whatever the plan); the last q_i rows — the
+            # allocator-excluded benchmarking devices — also materialize full
+            # RoundReports (paper §IV.C) re-stamped with the same global
+            # device ids their messages carry.
+            sample = tier.sample_round(np.arange(n_total), round_idx)
+            for k in range(n_total - entry.num_benchmarking, n_total):
+                rep = dataclasses.replace(
+                    sample.report(k), device_id=offset + k)
+                reports.append(rep)
+                tier.reports.append(rep)
+            if calibrator is not None:
+                calibrator.observe_fleet(sample)
+            offsets_s = sample.arrival_offsets_s()
+            arrivals.append(base + offsets_s)
+            breakdown[entry.grade] = GradeRoundBreakdown(
+                grade=entry.grade,
+                num_logical=entry.num_logical,
+                num_physical=entry.num_physical,
+                num_benchmarking=entry.num_benchmarking,
+                makespan_s=float(offsets_s.max()),
+                mean_duration_s=float(offsets_s.mean()),
+            )
+            offset += n_total
+
+        arrival_times = (np.concatenate(arrivals) if arrivals else None)
+        if self.deviceflow is not None and msgs:
+            self.deviceflow.submit_many(msgs, ts=arrival_times)
+            # The round ends when the slowest device reports, not at clock.now.
+            self.deviceflow.round_complete(
+                task_id, t=float(np.max(arrival_times)))
+        return FederatedRoundOutcome(
+            num_logical=sum(e.num_logical for e in plan.entries),
+            num_physical=sum(e.num_physical + e.num_benchmarking
+                             for e in plan.entries),
+            messages=msgs,
+            reports=reports,
+            arrival_times=arrival_times,
+            per_grade=breakdown,
+            client_metrics=client_metrics,
+        )
+
+    # -- legacy single-grade path ------------------------------------------
+    def run_round(
+        self,
+        task_id: int,
+        round_idx: int,
+        global_params: Params,
+        client_batches: Batch,  # leaves (num_clients, ...)
+        num_samples: np.ndarray,  # (num_clients,)
+        num_logical: int,
+        rng: jax.Array,
+        *,
+        benchmark_devices: int = 0,
+        arrival_times: np.ndarray | None = None,
+    ) -> FederatedRoundOutcome:
+        """Single-grade round against ``sim.device`` (legacy shape).
+
+        Unlike the plan path, ``benchmark_devices`` picks the FIRST n
+        device-tier rows and does not reduce ``num_physical`` — the historic
+        ``HybridSimulation(logical, device)`` contract.
+        """
+        tier = self.device
+        n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
+        metrics: list = []
+        msgs, _ = self._run_split(
+            tier, task_id, round_idx, global_params, client_batches,
+            np.asarray(num_samples), num_logical, rng, metrics_out=metrics)
+        reports: list[RoundReport] = []
 
         # Behavioral side: one vectorized fleet sample covers every simulated
         # device this round — Table-I durations become arrival times, and the
         # benchmarking subset materializes full RoundReports (paper §IV.C).
         sample: FleetRoundSample | None = None
         if n_total > 0:
-            sample = self.device.sample_round(np.arange(n_total), round_idx)
+            sample = tier.sample_round(np.arange(n_total), round_idx)
         n_bench = min(benchmark_devices, n_total - num_logical)
         for k in range(n_bench):
             rep = sample.report(num_logical + k)
             reports.append(rep)
-            self.device.reports.append(rep)
+            tier.reports.append(rep)
 
+        breakdown: dict[str, GradeRoundBreakdown] = {}
         if arrival_times is None and sample is not None:
             base = 0.0 if self.deviceflow is None else self.deviceflow.clock.now
             arrival_times = base + sample.arrival_offsets_s()
+        if sample is not None:
+            offsets_s = sample.arrival_offsets_s()
+            breakdown[tier.grade.name] = GradeRoundBreakdown(
+                grade=tier.grade.name,
+                num_logical=num_logical,
+                num_physical=n_total - num_logical,
+                num_benchmarking=n_bench,
+                makespan_s=float(offsets_s.max()),
+                mean_duration_s=float(offsets_s.mean()),
+            )
 
         if self.deviceflow is not None:
             self.deviceflow.submit_many(msgs, ts=arrival_times)
@@ -328,4 +644,6 @@ class HybridSimulation:
             messages=msgs,
             reports=reports,
             arrival_times=arrival_times,
+            per_grade=breakdown,
+            client_metrics=metrics,
         )

@@ -78,6 +78,12 @@ class GradeSpec:
         if self.bundles_per_device <= 0:
             raise ValueError("k_i must be positive")
 
+    @property
+    def allocatable_devices(self) -> int:
+        """N_i - q_i — devices the §IV.B allocator may split across tiers
+        (the q_i benchmarking devices are reserved for measurement)."""
+        return self.num_devices - self.benchmarking_devices
+
 
 @dataclasses.dataclass
 class Task:

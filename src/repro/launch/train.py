@@ -27,14 +27,23 @@ import numpy as np
 from repro.configs.base import SHAPES, ShapeConfig, choose_mesh_plan
 from repro.configs.registry import get_config
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core.deviceflow import DeviceFlow, Message
-from repro.core.devicemodel import GRADES, DeviceFleet
+from repro.core.allocation import solve_allocation
+from repro.core.calibration import RuntimeCalibrator
+from repro.core.deviceflow import DeviceFlow
+from repro.core.devicemodel import GRADES
 from repro.core.federation import (
     AggregationService,
     SampleThresholdTrigger,
     ScheduledTrigger,
 )
+from repro.core.simulation import (
+    DeviceTier,
+    HybridSimulation,
+    LogicalTier,
+    RoundPlan,
+)
 from repro.core.strategies import AccumulatedStrategy, TimeIntervalStrategy
+from repro.core.task import GradeSpec
 from repro.core.traffic_curves import right_tailed_normal
 from repro.data.tokens import TokenPipeline
 from repro.distribution.sharding import derive_logical_mesh
@@ -94,7 +103,14 @@ def cloud_training(args) -> dict:
 
 
 def federated_training(args) -> dict:
-    """SimDC federated loop: clients -> DeviceFlow -> trigger -> FedAvg."""
+    """SimDC federated loop: grade-partitioned rounds -> DeviceFlow -> FedAvg.
+
+    Clients are split across the requested device grades; each round the
+    hybrid allocator re-solves the per-grade logical/device split on
+    *fleet-calibrated* runtimes (Table-I priors seed round 0, every round's
+    fleet samples re-measure them), and ``HybridSimulation.run_plan_round``
+    executes the plan — per-grade cohorts, fleet-sampled arrival times.
+    """
     cfg = get_config(args.arch, smoke=True)  # clients train the reduced model
     api = get_model(cfg)
     rng = np.random.default_rng(args.seed)
@@ -108,9 +124,6 @@ def federated_training(args) -> dict:
     )
     svc = AggregationService(global_params, trigger=trigger)
     flow = DeviceFlow(svc, seed=args.seed)
-    # Behavioral fleet: per-round Table-I durations become message arrival
-    # times, so aggregation sees realistic queuing delay (not created_t=0).
-    fleet = DeviceFleet(GRADES["High"], args.clients_per_round, seed=args.seed)
     task_id = 0
     if args.traffic == "realtime":
         flow.register_task(task_id, AccumulatedStrategy(
@@ -120,52 +133,71 @@ def federated_training(args) -> dict:
             curve=right_tailed_normal(args.sigma), interval=args.round_seconds,
             failure_prob=args.dropout))
 
+    def local_train(params, batch, _rng):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, batch, cfg)[0])(params)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - args.client_lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, loss
+
+    # Grade partition: clients split evenly across the requested grades, one
+    # DeviceTier (with its own behavioral fleet) per grade.
+    grade_names = [g.strip() for g in args.grades.split(",") if g.strip()]
+    cohort = args.clients_per_round
+    per_grade = [cohort // len(grade_names)] * len(grade_names)
+    per_grade[0] += cohort - sum(per_grade)
+    specs = [
+        GradeSpec(g, n, logical_bundles=max(1, n // 2), bundles_per_device=1,
+                  physical_devices=max(1, n // 4))
+        for g, n in zip(grade_names, per_grade)
+    ]
+    sim = HybridSimulation(
+        LogicalTier(local_train, cohort_size=cohort),
+        tiers={g: DeviceTier(local_train, GRADES[g], seed=args.seed)
+               for g in grade_names})
+    cal = RuntimeCalibrator()  # Table-I prior until fleets report in
+
     losses = []
     comp_state = None
     seq = 64
     for rnd in range(args.rounds):
-        # Each round: a cohort of clients runs local training on private
-        # token shards (vectorized: one vmap over the cohort).
-        def local_train(params, batch, _rng):
-            loss, grads = jax.value_and_grad(
-                lambda p: api.loss_fn(p, batch, cfg)[0])(params)
-            new = jax.tree.map(
-                lambda p, g: (p.astype(jnp.float32)
-                              - args.client_lr * g.astype(jnp.float32)
-                              ).astype(p.dtype), params, grads)
-            return new, loss
+        # Re-solve the split on the latest measured runtimes (paper §IV.B/C).
+        plan = RoundPlan.from_allocation(
+            solve_allocation(specs, cal.runtimes_for(specs)), specs)
+        grade_batches, grade_counts = {}, {}
+        for spec in specs:
+            toks = rng.integers(
+                1, cfg.vocab_size,
+                size=(spec.num_devices, seq + 1)).astype(np.int32)
+            grade_batches[spec.grade] = {
+                "tokens": jnp.asarray(toks[:, None, :-1]),
+                "targets": jnp.asarray(toks[:, None, 1:]),
+                "mask": jnp.ones((spec.num_devices, 1, seq), jnp.float32),
+            }
+            grade_counts[spec.grade] = np.full(spec.num_devices, seq)
+        outcome = sim.run_plan_round(
+            task_id, rnd, svc.global_params, plan, grade_batches,
+            grade_counts, jax.random.PRNGKey(rnd), calibrator=cal)
+        # Per-device losses, flattened across chunks — chunks have unequal
+        # sizes, so averaging chunk means would bias toward small chunks.
+        losses.append(float(np.concatenate(
+            [np.asarray(jax.tree.leaves(m)[0]).reshape(-1)
+             for m in outcome.client_metrics]).mean()))
 
-        cohort = args.clients_per_round
-        toks = rng.integers(
-            1, cfg.vocab_size, size=(cohort, seq + 1)).astype(np.int32)
-        batch = {
-            "tokens": jnp.asarray(toks[:, :-1]),
-            "targets": jnp.asarray(toks[:, 1:]),
-            "mask": jnp.ones((cohort, seq), jnp.float32),
-        }
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (cohort,) + x.shape),
-            svc.global_params)
-        keys = jax.random.split(jax.random.PRNGKey(rnd), cohort)
-        new_params, loss = jax.vmap(local_train)(
-            stacked, jax.tree.map(lambda x: x[:, None], batch), keys)
-        losses.append(float(loss.mean()))
-
-        host = jax.device_get(new_params)
-        msgs = []
-        for c in range(cohort):
-            payload = jax.tree.map(lambda x: x[c], host)
-            if args.compress:
+        msgs = outcome.messages
+        if args.compress:
+            packed = []
+            for m in msgs:
                 if comp_state is None:
-                    comp_state = topk_init(payload)
-                payload, comp_state, stats = topk_compress(
-                    payload, comp_state, fraction=args.compress_fraction)
-            msgs.append(Message(
-                task_id=task_id, device_id=c, round_idx=rnd,
-                payload=payload, num_samples=seq,
-            ))
+                    comp_state = topk_init(m.payload)
+                payload, comp_state, _ = topk_compress(
+                    m.payload, comp_state, fraction=args.compress_fraction)
+                packed.append(dataclasses.replace(m, payload=payload))
+            msgs = packed
         # Bulk Sorter path: fleet-sampled round durations as arrival times.
-        arrivals = flow.clock.now + fleet.run_round(rnd).arrival_offsets_s()
+        arrivals = flow.clock.now + np.asarray(outcome.arrival_times)
         flow.submit_many(msgs, ts=arrivals)
         flow.round_complete(task_id, t=float(arrivals.max()))
         # Rule-based dispatch points extend up to round_seconds past the
@@ -194,6 +226,8 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--clients-per-round", type=int, default=8)
+    ap.add_argument("--grades", default="High",
+                    help="comma-separated device grades, e.g. High,Low")
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--trigger", choices=("samples", "scheduled"),
                     default="samples")

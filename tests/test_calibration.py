@@ -1,0 +1,158 @@
+"""Fleet-calibrated runtimes: round-trip fidelity, allocator integration."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import (
+    GradeRuntime,
+    solve_allocation,
+    solve_allocation_bruteforce,
+)
+from repro.core.calibration import (
+    RuntimeCalibrator,
+    calibrate_runtimes,
+    table1_runtime,
+)
+from repro.core.devicemodel import GRADES, DeviceFleet, Stage
+from repro.core.scheduler import ResourceManager, ResourcePool, TaskRunner
+from repro.core.task import GradeSpec, OperatorFlow, Task
+
+
+# --------------------------------------------------------------------------- #
+# Round trip: fleet samples -> calibrated runtimes reproduce Table-I means
+# --------------------------------------------------------------------------- #
+def test_calibrate_runtimes_roundtrip_table1():
+    samples = []
+    for g in ("High", "Low"):
+        fleet = DeviceFleet(GRADES[g], 2000, seed=3)
+        samples += [fleet.run_round(r) for r in range(2)]
+    measured = calibrate_runtimes(samples=samples)
+    for g in ("High", "Low"):
+        ref = table1_runtime(GRADES[g])
+        got = measured[g]
+        assert got.alpha == pytest.approx(ref.alpha, rel=0.02)
+        assert got.beta == pytest.approx(ref.beta, rel=0.02)
+        assert got.lam == pytest.approx(ref.lam, rel=0.02)
+    # Table-I ordering survives measurement: Low phones are slower.
+    assert measured["High"].beta < measured["Low"].beta
+
+
+def test_calibrate_from_benchmarking_reports():
+    fleet = DeviceFleet(GRADES["High"], 600, seed=1)
+    reports = [fleet.run_round(0).report(i) for i in range(600)]
+    measured = calibrate_runtimes(reports=reports)["High"]
+    ref = table1_runtime(GRADES["High"])
+    assert measured.beta == pytest.approx(ref.beta, rel=0.05)
+    assert measured.lam == pytest.approx(ref.lam, rel=0.05)
+
+
+def test_observed_logical_durations_override_alpha():
+    cal = RuntimeCalibrator()
+    cal.observe_fleet(DeviceFleet(GRADES["High"], 64, seed=0).run_round(0))
+    assert cal.runtime("High").alpha == pytest.approx(
+        table1_runtime(GRADES["High"]).alpha, rel=0.1)
+    for d in (4.0, 6.0):
+        cal.observe_logical("High", d)
+    assert cal.runtime("High").alpha == pytest.approx(5.0)
+
+
+def test_logical_only_observations_still_measure_alpha():
+    """A grade observed solely via observe_logical keeps the measured alpha
+    (beta/lambda come from the fallback) instead of being ignored."""
+    cal = RuntimeCalibrator()
+    cal.observe_logical("High", 5.0)
+    rt = cal.runtime("High")
+    assert rt.alpha == pytest.approx(5.0)
+    ref = table1_runtime(GRADES["High"])
+    assert rt.beta == pytest.approx(ref.beta)
+    assert rt.lam == pytest.approx(ref.lam)
+
+
+def test_uncalibrated_grade_falls_back_to_prior_then_table1():
+    cal = RuntimeCalibrator(prior={"Custom": GradeRuntime(1.0, 2.0, 0.5)})
+    assert cal.runtime("Custom").beta == 2.0  # explicit prior
+    assert cal.runtime("High").beta == pytest.approx(
+        table1_runtime(GRADES["High"]).beta)  # Table-I default
+    with pytest.raises(KeyError):
+        cal.runtime("Unknown")
+
+
+def test_sample_runtimes_draws_observed_rounds():
+    cal = RuntimeCalibrator()
+    fleet = DeviceFleet(GRADES["High"], 128, seed=5)
+    cal.observe_fleet(fleet.run_round(0))
+    rng = np.random.default_rng(0)
+    draws = [cal.sample_runtimes(["High"], rng)[0] for _ in range(16)]
+    betas = {d.beta for d in draws}
+    assert len(betas) > 1  # sampled, not the mean
+    mean_beta = cal.runtime("High").beta
+    assert all(abs(d.beta - mean_beta) / mean_beta < 0.5 for d in draws)
+    # Sampled durations drive a valid allocation (finite makespan).
+    spec = GradeSpec("High", 20, logical_bundles=8, physical_devices=4)
+    res = solve_allocation([spec], cal.sample_runtimes([spec], rng))
+    assert np.isfinite(res.makespan)
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler integration: TaskRunner consumes the calibrator directly
+# --------------------------------------------------------------------------- #
+def test_task_runner_accepts_calibrator():
+    cal = RuntimeCalibrator()
+    cal.observe_fleet(DeviceFleet(GRADES["High"], 64, seed=2).run_round(0))
+    rm = ResourceManager(ResourcePool({"High": 100}, {"High": 10}))
+    seen = []
+    runner = TaskRunner(
+        rm, runtimes=cal,
+        tier_runners={"logical": lambda *a: seen.append(("l", a[2])) or [],
+                      "device": lambda *a: seen.append(("d", a[2])) or []},
+    )
+    task = Task(OperatorFlow(("train",)),
+                (GradeSpec("High", 8, logical_bundles=40,
+                           physical_devices=4),))
+    rm.freeze(task.task_id, task.demand())
+    rec = runner.run(task)
+    assert rec.state.value == "completed"
+    assert sum(n for _, n in seen) == 8  # all devices placed by the split
+
+
+# --------------------------------------------------------------------------- #
+# Property: calibrated runtimes keep the exact solver exact
+# --------------------------------------------------------------------------- #
+grade_strategy = st.builds(
+    lambda N, q, f, k, m: GradeSpec(
+        "g", N, benchmarking_devices=min(q, N), logical_bundles=f,
+        bundles_per_device=k, physical_devices=m),
+    N=st.integers(0, 30), q=st.integers(0, 4), f=st.integers(1, 20),
+    k=st.integers(1, 5), m=st.integers(1, 6),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(grade_strategy, min_size=1, max_size=2),
+       st.integers(0, 10_000), st.integers(1, 64), st.integers(1, 3))
+def test_calibrated_allocator_matches_bruteforce(specs, seed, n_dev, n_rounds):
+    """Allocation on *measured* runtimes agrees with the O(N) oracle."""
+    cal = RuntimeCalibrator()
+    for g in ("High", "Low"):
+        fleet = DeviceFleet(GRADES[g], n_dev, seed=seed)
+        for r in range(n_rounds):
+            cal.observe_fleet(fleet.run_round(r))
+    specs = [
+        GradeSpec(("High", "Low")[i % 2], s.num_devices,
+                  s.benchmarking_devices, s.logical_bundles,
+                  s.bundles_per_device, s.physical_devices)
+        for i, s in enumerate(specs)
+    ]
+    rts = cal.runtimes_for(specs)
+    a = solve_allocation(specs, rts)
+    b = solve_allocation_bruteforce(specs, rts)
+    assert a.makespan == pytest.approx(b.makespan)
+    assert a.total_logical == b.total_logical
+
+
+def test_table1_runtime_train_cost_scale():
+    base = table1_runtime(GRADES["High"])
+    scaled = table1_runtime(GRADES["High"], train_cost_scale=2.0)
+    assert scaled.alpha == pytest.approx(2 * base.alpha)
+    assert scaled.beta == pytest.approx(base.beta + base.alpha)
+    assert scaled.lam == pytest.approx(base.lam)

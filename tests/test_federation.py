@@ -60,6 +60,44 @@ def test_scheduled_trigger_fires_on_tick():
     assert len(svc.history) == 1
 
 
+def test_scheduled_trigger_stays_on_grid():
+    """Satellite fix: firing re-anchors to the grid point, not the tick's
+    arrival time — late ticks must not drift the whole schedule."""
+    trig = ScheduledTrigger(period=10.0)
+    svc = AggregationService({"w": jnp.zeros(2)}, trigger=trig)
+    msg = Message(0, 0, 0, {"w": jnp.ones(2)}, num_samples=1)
+    svc(Delivery(t=1.0, message=msg))
+    svc.tick(10.5)  # late tick: fires, but the grid stays at 10.0
+    assert len(svc.history) == 1
+    assert trig._last == pytest.approx(10.0)
+    svc(Delivery(t=12.0, message=msg))
+    # Old behavior re-anchored to 10.5 and needed t >= 20.5; the fixed grid
+    # fires at the scheduled time 20.0.
+    svc.tick(20.0)
+    assert len(svc.history) == 2
+    assert trig._last == pytest.approx(20.0)
+    svc(Delivery(t=21.0, message=msg))
+    svc.tick(57.3)  # several periods skipped: snap forward on the grid
+    assert len(svc.history) == 3
+    assert trig._last == pytest.approx(50.0)
+
+
+def test_aggregate_survives_all_zero_weights():
+    """Satellite fix: an aggressive staleness discount zeroing every pending
+    weight falls back to uniform weights instead of raising mid-delivery."""
+    svc = AggregationService(
+        {"w": jnp.zeros(1)},
+        trigger=ClientCountTrigger(2),
+        staleness_discount=lambda s: 0.0,
+    )
+    svc(Delivery(t=0, message=Message(0, 0, 0, {"w": jnp.array([2.0])},
+                                      num_samples=1)))
+    svc(Delivery(t=0, message=Message(0, 1, 0, {"w": jnp.array([4.0])},
+                                      num_samples=3)))
+    assert len(svc.history) == 1  # did not crash the delivery callback
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]), [3.0])
+
+
 def test_staleness_discount_downweights():
     svc = AggregationService(
         {"w": jnp.zeros(1)},

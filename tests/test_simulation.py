@@ -4,11 +4,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.allocation import GradeRuntime, solve_allocation
+from repro.core.calibration import RuntimeCalibrator
 from repro.core.deviceflow import DeviceFlow, Message
 from repro.core.devicemodel import GRADES, DeviceFleet, Stage
 from repro.core.federation import AggregationService, SampleThresholdTrigger
-from repro.core.simulation import DeviceTier, HybridSimulation, LogicalTier
+from repro.core.simulation import (
+    DeviceTier,
+    GradePlanEntry,
+    HybridSimulation,
+    LogicalTier,
+    RoundPlan,
+)
 from repro.core.strategies import AccumulatedStrategy
+from repro.core.task import GradeSpec
 from repro.data.synthetic_ctr import make_federated_ctr
 from repro.models import ctr as ctr_lib
 
@@ -176,6 +185,169 @@ def test_hybrid_round_all_logical_still_gets_arrivals():
     assert out.num_physical == 0
     assert out.arrival_times is not None and (out.arrival_times > 0).all()
     assert len(got) == 12
+
+
+# --------------------------------------------------------------------------- #
+# Grade-partitioned round engine — RoundPlan + multi-grade rounds
+# --------------------------------------------------------------------------- #
+def _two_grade_setup(n_high=10, n_low=8, rpd=8, dim=16):
+    local = ctr_lib.make_local_train_fn(lr=1e-2, epochs=2)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    gb, gs = {}, {}
+    for i, (g, n) in enumerate((("High", n_high), ("Low", n_low))):
+        data = make_federated_ctr(num_devices=n, records_per_device=rpd,
+                                  dim=dim, seed=i)
+        X, Y, counts = data.stacked_shards(np.arange(n), rpd)
+        mask = (np.arange(rpd)[None] < counts[:, None]).astype(np.float32)
+        gb[g] = {"x": jnp.asarray(X), "y": jnp.asarray(Y),
+                 "mask": jnp.asarray(mask)}
+        gs[g] = counts
+    return local, params, gb, gs
+
+
+def _two_grade_specs(n_high=10, n_low=8, q_high=2, q_low=1):
+    return [
+        GradeSpec("High", n_high, benchmarking_devices=q_high,
+                  logical_bundles=4, bundles_per_device=2,
+                  physical_devices=3),
+        GradeSpec("Low", n_low, benchmarking_devices=q_low,
+                  logical_bundles=2, bundles_per_device=1,
+                  physical_devices=2),
+    ]
+
+
+def test_round_plan_from_allocation_carries_benchmarking():
+    """Satellite: q_i flows from GradeSpec through the allocator to the plan,
+    so the devices producing RoundReports are the allocator-excluded ones."""
+    specs = _two_grade_specs()
+    res = solve_allocation(specs, [GradeRuntime(2.0, 3.0, 1.0)] * 2)
+    plan = RoundPlan.from_allocation(res, specs)
+    for spec, ga in zip(specs, res.per_grade):
+        e = plan.entry(spec.grade)
+        assert e.num_benchmarking == spec.benchmarking_devices
+        assert e.num_logical == ga.logical_devices
+        assert e.num_physical == ga.physical_devices
+        assert e.num_devices == spec.num_devices  # x + y + q == N
+    assert plan.total_devices == sum(s.num_devices for s in specs)
+    with pytest.raises(KeyError):
+        plan.entry("Mid")
+
+
+def test_multi_grade_round_end_to_end():
+    """High+Low fleets in one round: allocator split respected, per-grade
+    makespans reported, arrival durations monotone in grade beta."""
+    local, params, gb, gs = _two_grade_setup()
+    specs = _two_grade_specs()
+    cal = RuntimeCalibrator()
+    res = solve_allocation(specs, cal.runtimes_for(specs))  # Table-I prior
+    plan = RoundPlan.from_allocation(res, specs)
+    deliveries = []
+    flow = DeviceFlow(deliveries.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    sim = HybridSimulation(
+        LogicalTier(local, cohort_size=8),
+        tiers={g: DeviceTier(local, GRADES[g], cohort_size=4)
+               for g in ("High", "Low")},
+        deviceflow=flow)
+    out = sim.run_plan_round(0, 0, params, plan, gb, gs,
+                             jax.random.PRNGKey(1), calibrator=cal)
+    n_total = 18
+    assert len(out.messages) == n_total and len(deliveries) == n_total
+    assert out.arrival_times is not None and len(out.arrival_times) == n_total
+    assert (out.arrival_times > 0).all()
+    assert flow.conservation_ok(0)
+    # Allocator split respected per grade.
+    for spec, ga in zip(specs, res.per_grade):
+        b = out.per_grade[spec.grade]
+        assert (b.num_logical, b.num_physical) == (
+            ga.logical_devices, ga.physical_devices)
+        assert b.num_benchmarking == spec.benchmarking_devices
+        assert b.makespan_s > 0
+    # q_i benchmarking devices -> exactly that many RoundReports per grade.
+    per_grade_reports = {g: [r for r in out.reports if r.grade == g]
+                         for g in ("High", "Low")}
+    assert len(per_grade_reports["High"]) == 2
+    assert len(per_grade_reports["Low"]) == 1
+    assert len(sim.tiers["High"].reports) == 2
+    assert len(sim.tiers["Low"].reports) == 1
+    # Arrival durations monotone in grade beta: Low (beta_Low > beta_High)
+    # devices finish later on average.
+    assert (out.per_grade["Low"].mean_duration_s
+            > out.per_grade["High"].mean_duration_s)
+    assert out.makespan_s == max(b.makespan_s
+                                 for b in out.per_grade.values())
+    # Device ids are globally unique across the grades.
+    ids = [m.device_id for m in out.messages]
+    assert len(set(ids)) == n_total
+    # Calibrator observed both grades' fleets this round.
+    assert cal.num_observations("High") == 10
+    assert cal.num_observations("Low") == 8
+
+
+def test_multi_grade_benchmarking_devices_are_device_tier_rows():
+    """The q_i report rows are the LAST rows of the grade — the device-tier
+    tail the allocator excluded, never logical-tier rows — and carry the same
+    global device ids as their messages."""
+    local, params, gb, gs = _two_grade_setup()
+    specs = _two_grade_specs()
+    res = solve_allocation(specs, RuntimeCalibrator().runtimes_for(specs))
+    plan = RoundPlan.from_allocation(res, specs)
+    sim = HybridSimulation(
+        LogicalTier(local, cohort_size=8),
+        tiers={g: DeviceTier(local, GRADES[g]) for g in ("High", "Low")})
+    out = sim.run_plan_round(0, 0, params, plan, gb, gs, jax.random.PRNGKey(0))
+    offset = 0
+    for spec in specs:
+        e = plan.entry(spec.grade)
+        got = sorted(r.device_id for r in out.reports
+                     if r.grade == spec.grade)
+        want = list(range(offset + e.num_devices - e.num_benchmarking,
+                          offset + e.num_devices))
+        assert got == want  # the grade's global tail rows
+        offset += e.num_devices
+    # Report ids join 1:1 onto message ids (global, unique across grades).
+    msg_ids = {m.device_id for m in out.messages}
+    assert all(r.device_id in msg_ids for r in out.reports)
+
+
+def test_run_plan_round_validates_batch_sizes():
+    local, params, gb, gs = _two_grade_setup()
+    plan = RoundPlan((GradePlanEntry("High", 4, 3, 1),))  # needs 8, gb has 10
+    sim = HybridSimulation(
+        LogicalTier(local, cohort_size=8),
+        tiers={"High": DeviceTier(local, GRADES["High"])})
+    with pytest.raises(ValueError, match="plan requires"):
+        sim.run_plan_round(0, 0, params, plan, gb, gs, jax.random.PRNGKey(0))
+    missing = RoundPlan((GradePlanEntry("Mid", 1, 0, 0),))
+    with pytest.raises(KeyError):
+        sim.run_plan_round(0, 0, params, missing, gb, gs,
+                           jax.random.PRNGKey(0))
+
+
+def test_single_device_tier_still_exposes_legacy_device_attr():
+    local, params, gb, gs = _two_grade_setup()
+    sim = HybridSimulation(LogicalTier(local),
+                           DeviceTier(local, GRADES["High"]))
+    assert sim.device.grade.name == "High"
+    multi = HybridSimulation(
+        LogicalTier(local),
+        tiers={g: DeviceTier(local, GRADES[g]) for g in ("High", "Low")})
+    with pytest.raises(ValueError):
+        _ = multi.device
+
+
+def test_device_tier_mesh_cohort_matches_unsharded():
+    """DeviceTier shards cohorts over the mesh data axis like LogicalTier."""
+    local, params, batches, _ = _ctr_setup(n_clients=8)
+    keys = jax.random.split(jax.random.PRNGKey(2), 8)
+    plain = DeviceTier(local, GRADES["High"])
+    mesh = jax.make_mesh((1,), ("data",))
+    sharded = DeviceTier(local, GRADES["High"], mesh=mesh)
+    p0, _ = plain.run_cohort(params, batches, keys)
+    p1, _ = sharded.run_cohort(params, batches, keys)
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
 
 
 # --------------------------------------------------------------------------- #
