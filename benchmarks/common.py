@@ -33,7 +33,10 @@ def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
     t0 = time.perf_counter()
     out = None
     for _ in range(repeats):
-        out = fn(*args, **kwargs)
+        # JAX dispatch is async: block on returned arrays (pytrees pass
+        # through; non-array leaves are untouched) so device-side timings
+        # report compute cost, not dispatch cost.
+        out = jax.block_until_ready(fn(*args, **kwargs))
     dt = (time.perf_counter() - t0) / repeats
     return out, dt * 1e6  # us
 

@@ -7,6 +7,22 @@ fleet-sampled Table-I round durations become per-message arrival times through
 DeviceFlow, and the cloud aggregates with FedAvg while tracking real queuing
 latency.
 
+**Zero-copy rounds (default).**  Model updates are device-resident end to
+end: each cohort chunk's stacked output stays on device as an
+``UpdateBuffer`` and every ``Message.payload`` is a lightweight
+``UpdateHandle`` (buffer ref + row).  The aggregation below never builds a
+per-device host pytree — ``AggregationService`` detects handle payloads and
+runs one fused ``fed_reduce`` weighted reduction per buffer (a Pallas kernel
+on TPU).  Host materialization still happens in exactly three places: the
+q_i benchmarking devices (their updates accompany the ``RoundReport``
+telemetry printed at the end), checkpoint saves (``Checkpointer``
+materializes handles), and host-side payload transforms like top-k
+compression.  Pass ``HybridSimulation(..., zero_copy=False)`` to get the old
+host-materializing path, and ``AggregationService(...,
+donate_params=True)`` to recycle the global-params buffer between rounds
+(skip it if you read ``history[i].global_params`` later — donation
+invalidates the previous round's copy).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -86,6 +102,12 @@ for rnd in range(ROUNDS):
                          for g, b in outcome.per_grade.items())
     print(f"round {rnd}: aggregations={len(svc.history)} test_acc={acc:.4f} "
           f"makespan[{per_grade}] round_end_t={outcome.makespan_s:.1f}s")
+
+# Handle payloads report real model-update sizes, so DeviceFlow traffic
+# accounting reflects the bytes physical devices would have uploaded.
+shelf = flow.shelf(0)
+print(f"deviceflow traffic: {shelf.total_bytes_dispatched / 1024:.1f} KiB "
+      f"dispatched across {shelf.total_dispatched} update messages")
 
 rts = cal.runtimes_for(specs)
 print("re-measured runtimes:",

@@ -24,6 +24,8 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.core.updates import materialize_handles
+
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -52,8 +54,13 @@ class Checkpointer:
         return self.dir / f"step_{step:010d}"
 
     def save(self, step: int, tree: Any, *, extra: dict | None = None) -> None:
-        """Synchronous save with atomic manifest commit."""
-        leaves, _ = _flatten(tree)
+        """Synchronous save with atomic manifest commit.
+
+        Zero-copy handle payloads (``core.updates.UpdateHandle`` /
+        ``UpdateBuffer``) anywhere in ``tree`` are materialized to host
+        pytrees here — saved state must never contain live device references.
+        """
+        leaves, _ = _flatten(materialize_handles(tree))
         tmp = pathlib.Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
         try:
             np.savez(tmp / f"shard-{self.host_id}.npz",
@@ -83,7 +90,7 @@ class Checkpointer:
         consistent snapshot); serialization+fsync run on a worker thread.
         """
         self.wait()
-        host_tree = jax.tree.map(np.asarray, tree)
+        host_tree = jax.tree.map(np.asarray, materialize_handles(tree))
 
         def work():
             try:

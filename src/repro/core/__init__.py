@@ -18,8 +18,15 @@ from repro.core.federation import (
     SampleThresholdTrigger,
     ScheduledTrigger,
     fedavg_delta,
+    fused_fedavg_delta,
+    handles_align,
     polynomial_staleness,
     weighted_average,
+)
+from repro.core.updates import (
+    UpdateBuffer,
+    UpdateHandle,
+    materialize_handles,
 )
 from repro.core.scheduler import (
     ResourceManager,
@@ -55,7 +62,9 @@ __all__ = [
     "DeviceTier", "FederatedRoundOutcome", "GradePlanEntry",
     "GradeRoundBreakdown", "HybridSimulation", "LogicalTier", "RoundPlan",
     "AggregationService", "ClientCountTrigger", "SampleThresholdTrigger",
-    "ScheduledTrigger", "fedavg_delta", "polynomial_staleness", "weighted_average",
+    "ScheduledTrigger", "fedavg_delta", "fused_fedavg_delta",
+    "handles_align", "polynomial_staleness", "weighted_average",
+    "UpdateBuffer", "UpdateHandle", "materialize_handles",
     "ResourceManager", "ResourcePool", "TaskManager", "TaskRunner", "TaskScheduler",
     "AccumulatedStrategy", "DispatchPoint", "TimeIntervalStrategy",
     "TimePointStrategy", "discretize_curve",

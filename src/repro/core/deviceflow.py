@@ -43,9 +43,39 @@ from repro.core.strategies import (
 )
 
 
-@dataclasses.dataclass(frozen=True)
-class Message:
-    """One edge→cloud message (model update, metric packet, ...)."""
+def payload_nbytes(payload: Any) -> int:
+    """Best-effort wire size of a message payload.
+
+    Anything exposing ``nbytes`` (ndarray / jax.Array leaves, and
+    ``updates.UpdateHandle`` — which reports its stacked-buffer *row* size,
+    the bytes a physical device would actually upload) counts directly;
+    containers sum their children; opaque objects count 0.
+    """
+    nb = getattr(payload, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(payload, dict):
+        return sum(payload_nbytes(v) for v in payload.values())
+    if isinstance(payload, (list, tuple)):
+        return sum(payload_nbytes(v) for v in payload)
+    return 0
+
+
+class _Weakrefable:
+    # Base slot so the slotted Message below still supports weak references
+    # (``weakref_slot=True`` needs 3.11; the base-class form works on 3.10).
+    __slots__ = ("__weakref__",)
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class Message(_Weakrefable):
+    """One edge→cloud message (model update, metric packet, ...).
+
+    Slotted: rounds emit one instance per simulated device, so per-instance
+    ``__dict__``s are real memory at fleet scale.  ``size_bytes`` is
+    auto-computed from the payload when not given, so DeviceFlow traffic
+    accounting reflects real model-update sizes instead of defaulting to 0.
+    """
 
     task_id: int
     device_id: int
@@ -54,6 +84,11 @@ class Message:
     created_t: float = 0.0
     num_samples: int = 1
     size_bytes: int = 0
+
+    def __post_init__(self):
+        if self.size_bytes == 0:
+            object.__setattr__(
+                self, "size_bytes", payload_nbytes(self.payload))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,17 +108,23 @@ class Shelf:
         self.total_received = 0
         self.total_dispatched = 0
         self.total_dropped = 0
+        # Real traffic accounting (edge->cloud model-update bytes): payloads
+        # report their wire size via Message.size_bytes — handle payloads
+        # count the stacked-buffer row, not the reference.
+        self.total_bytes_received = 0
+        self.total_bytes_dispatched = 0
 
     def put(self, msg: Message) -> None:
         self._buf.append(msg)
         self.total_received += 1
+        self.total_bytes_received += msg.size_bytes
 
     def put_many(self, msgs: Iterable[Message]) -> int:
-        n0 = len(self._buf)
+        msgs = list(msgs)
         self._buf.extend(msgs)
-        added = len(self._buf) - n0
-        self.total_received += added
-        return added
+        self.total_received += len(msgs)
+        self.total_bytes_received += sum(m.size_bytes for m in msgs)
+        return len(msgs)
 
     def take(self, n: int) -> list[Message]:
         n = min(n, len(self._buf))
@@ -101,6 +142,8 @@ class Shelf:
             "received": self.total_received,
             "dispatched": self.total_dispatched,
             "dropped": self.total_dropped,
+            "bytes_received": self.total_bytes_received,
+            "bytes_dispatched": self.total_bytes_dispatched,
         }
 
     @classmethod
@@ -110,6 +153,8 @@ class Shelf:
         s.total_received = d["received"]
         s.total_dispatched = d["dispatched"]
         s.total_dropped = d["dropped"]
+        s.total_bytes_received = d.get("bytes_received", 0)
+        s.total_bytes_dispatched = d.get("bytes_dispatched", 0)
         return s
 
 
@@ -209,6 +254,7 @@ class Dispatcher:
                 self.shelf.total_dropped += 1
                 continue
             self.shelf.total_dispatched += 1
+            self.shelf.total_bytes_dispatched += m.size_bytes
             self.deliver(Delivery(t=t, message=m))
 
     # -- checkpointing hooks -----------------------------------------------

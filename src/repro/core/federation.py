@@ -12,6 +12,16 @@ the two aggregation *triggers* the paper evaluates (Fig. 9):
 Beyond-paper: an **async buffered (FedBuff-style)** mode with staleness
 discounting — the natural straggler-mitigation extension once DeviceFlow
 exposes arrival times.
+
+**Zero-copy aggregation.**  When every pending payload is an
+``updates.UpdateHandle`` (the round engine's device-resident stacked buffers),
+``aggregate`` never materializes host pytrees: ``fused_fedavg_delta`` groups
+the handles by buffer, scatters the staleness-discounted weights into one
+per-row weight vector per buffer, and runs a single fused weighted reduction
+over each stacked buffer (the ``kernels/fed_reduce`` Pallas kernel on TPU, a
+fused ``tensordot`` elsewhere).  The per-message host path below
+(``weighted_average``/``fedavg_delta``) is kept as the correctness reference
+and still serves mixed/host payloads.
 """
 from __future__ import annotations
 
@@ -21,8 +31,11 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.deviceflow import Delivery, Message
+from repro.core.updates import UpdateHandle
+from repro.kernels.fed_reduce.ops import fed_reduce
 
 Params = Any  # pytree
 
@@ -53,6 +66,109 @@ def fedavg_delta(global_params: Params, updates: list[Params],
     return jax.tree.map(lambda g, a: g + server_lr * (a - g), global_params, avg)
 
 
+def _fused_reduce_apply(global_params: Params, buf_leaves: tuple,
+                        wvecs: tuple, inv_total: jax.Array, lr: jax.Array,
+                        *, impl: str) -> Params:
+    # buf_leaves: one tuple of (rows, size) matrices per buffer, leaf order
+    # matching global_params.  Keeping operands 2-D end-to-end is what lets
+    # every weighted row-reduction lower to a BLAS/MXU matmul.
+    weighted_sum = None  # list of (size,) f32 unnormalized weighted sums
+    for leaves2d, w in zip(buf_leaves, wvecs):
+        parts = [fed_reduce(leaf, w, impl=impl) for leaf in leaves2d]
+        weighted_sum = parts if weighted_sum is None else [
+            a + b for a, b in zip(weighted_sum, parts)]
+    g_leaves, treedef = jax.tree.flatten(global_params)
+    out = [(g + lr * (s.reshape(g.shape) * inv_total - g)).astype(g.dtype)
+           for g, s in zip(g_leaves, weighted_sum)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# One XLA dispatch per aggregation: every buffer's per-leaf weighted
+# row-reduction, the cross-buffer sum, and the server update fuse into a
+# single jitted call (eager per-leaf dispatch overhead would otherwise
+# dominate).  Two jit instances so donation is a call-site choice, not a
+# retrace: the donated variant invalidates the *old* global-params buffer,
+# reusing it for the new round's parameters (zero allocation churn between
+# rounds).
+_FUSED_REDUCE_APPLY = jax.jit(_fused_reduce_apply, static_argnames=("impl",))
+_FUSED_REDUCE_APPLY_DONATED = jax.jit(
+    _fused_reduce_apply, static_argnames=("impl",), donate_argnums=(0,))
+
+
+def handles_align(global_params: Params, payloads: list) -> bool:
+    """True when every payload is an ``UpdateHandle`` whose buffer layout
+    matches ``global_params`` (same treedef, same leaf shapes) — the
+    precondition for the fused zero-copy aggregation path."""
+    if not payloads or not all(isinstance(p, UpdateHandle) for p in payloads):
+        return False
+    leaves, treedef = jax.tree.flatten(global_params)
+    shapes = [tuple(g.shape) for g in leaves]
+    seen: set[int] = set()
+    for p in payloads:
+        if id(p.buffer) in seen:
+            continue
+        seen.add(id(p.buffer))
+        if p.buffer.treedef != treedef or p.buffer.shapes != shapes:
+            return False
+    return True
+
+
+def fused_fedavg_delta(
+    global_params: Params,
+    handles: list[UpdateHandle],
+    weights: list[float],
+    *,
+    server_lr: float = 1.0,
+    impl: str = "auto",
+    donate: bool = False,
+) -> Params:
+    """``fedavg_delta`` over device-resident handle payloads, fused.
+
+    Groups ``handles`` by their stacked update buffer, scatters ``weights``
+    into one per-row f32 weight vector per buffer (rows not referenced weigh
+    zero), reduces each buffer with one ``fed_reduce`` weighted row-sum per
+    leaf (the Pallas kernel on TPU), sums the per-buffer partials, and
+    applies the server update — without ever materializing a per-device host
+    pytree, in one XLA dispatch.  Matches the host ``fedavg_delta``
+    reference within accumulation tolerance.
+
+    ``donate=True`` additionally donates the old global-params buffer to the
+    server update (the caller's previous reference is invalidated).
+    """
+    if not handles:
+        raise ValueError("no updates to aggregate")
+    if not handles_align(global_params, handles):
+        raise ValueError(
+            "handle buffers do not align with global_params (treedef/shape "
+            "mismatch) — materialize and use fedavg_delta instead")
+    return _fused_fedavg_delta_validated(
+        global_params, handles, weights, server_lr=server_lr, impl=impl,
+        donate=donate)
+
+
+def _fused_fedavg_delta_validated(global_params, handles, weights, *,
+                                  server_lr, impl, donate):
+    # Core of fused_fedavg_delta, after handles_align: the aggregation
+    # service calls this directly so the O(pending) alignment pass runs
+    # once per aggregation, not twice.
+    if not handles:
+        raise ValueError("no updates to aggregate")
+    total = float(sum(weights))
+    if total <= 0:
+        raise ValueError("weights must sum to a positive value")
+    groups: dict[int, tuple[Any, np.ndarray]] = {}
+    for h, w in zip(handles, weights):
+        key = id(h.buffer)
+        if key not in groups:
+            groups[key] = (h.buffer, np.zeros(h.buffer.num_rows, np.float32))
+        groups[key][1][h.row] += w
+    buf_leaves = tuple(tuple(buf.leaves2d) for buf, _ in groups.values())
+    wvecs = tuple(jnp.asarray(wvec) for _, wvec in groups.values())
+    apply = _FUSED_REDUCE_APPLY_DONATED if donate else _FUSED_REDUCE_APPLY
+    return apply(global_params, buf_leaves, wvecs,
+                 jnp.float32(1.0 / total), jnp.float32(server_lr), impl=impl)
+
+
 @dataclasses.dataclass
 class AggregationEvent:
     t: float
@@ -78,12 +194,21 @@ class AggregationService:
         server_lr: float = 1.0,
         staleness_discount: Callable[[int], float] | None = None,
         on_aggregate: Callable[[AggregationEvent], None] | None = None,
+        reduce_impl: str = "auto",
+        donate_params: bool = False,
     ):
         self.global_params = global_params
         self.trigger = trigger
         self.server_lr = server_lr
         self.staleness_discount = staleness_discount
         self.on_aggregate = on_aggregate
+        # Zero-copy path knobs: ``reduce_impl`` selects the fed_reduce
+        # backend for handle payloads; ``donate_params`` recycles the old
+        # global-params buffer each aggregation.  Donation invalidates the
+        # params stored on the *previous* AggregationEvent — leave it off
+        # when history params are read back (e.g. per-round eval curves).
+        self.reduce_impl = reduce_impl
+        self.donate_params = donate_params
         self._pending: list[Message] = []
         self._pending_samples = 0
         self._pending_latency = 0.0
@@ -119,9 +244,21 @@ class AggregationService:
             # fall back to uniform weights instead of crashing the delivery
             # callback mid-flow.
             weights = [1.0] * len(updates)
-        self.global_params = fedavg_delta(
-            self.global_params, updates, weights, server_lr=self.server_lr
-        )
+        if handles_align(self.global_params, updates):
+            # Zero-copy path: one fused weighted reduction per stacked
+            # buffer, no host materialization.
+            self.global_params = _fused_fedavg_delta_validated(
+                self.global_params, updates, weights,
+                server_lr=self.server_lr, impl=self.reduce_impl,
+                donate=self.donate_params)
+        else:
+            # Host reference path (serves host payloads; stray handles in a
+            # mixed batch are materialized rather than crashing mid-flow).
+            updates = [u.materialize() if isinstance(u, UpdateHandle) else u
+                       for u in updates]
+            self.global_params = fedavg_delta(
+                self.global_params, updates, weights,
+                server_lr=self.server_lr)
         ev = AggregationEvent(
             t=t,
             round_idx=self.round_idx,

@@ -37,6 +37,15 @@ excluded, and reports a per-grade makespan breakdown in
 the sampled durations back into allocation (measured, not hand-coded,
 ``GradeRuntime``s — the paper's calibration loop).
 
+**Zero-copy round pipeline.**  Model updates are device-resident end-to-end:
+cohort outputs stay stacked on device (one ``core.updates.UpdateBuffer`` per
+chunk), messages carry ``UpdateHandle`` payloads, and aggregation runs one
+fused weighted reduction per buffer (``kernels/fed_reduce``) instead of
+walking per-device host pytrees.  Host materialization happens only for the
+q_i benchmarking devices and at checkpoint time.  Construct
+``HybridSimulation(..., zero_copy=False)`` for the host-materializing
+reference path.
+
 The legacy single-grade ``run_round(..., num_logical=...)`` path is kept as a
 thin wrapper over the same per-grade execution helper.
 """
@@ -51,6 +60,12 @@ import numpy as np
 
 from repro.core.allocation import AllocationResult
 from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.updates import (
+    UpdateBuffer,
+    UpdateHandle,
+    flatten_rows,
+    stacked_spec,
+)
 from repro.core.devicemodel import (
     DeviceFleet,
     DeviceGrade,
@@ -94,7 +109,87 @@ def _shard_over_data(fn, mesh, data_axis: str, n_in: int, n_out: int):
     )
 
 
-class LogicalTier:
+class _ZeroCopyCohortMixin:
+    """Shared zero-copy machinery for the simulation tiers.
+
+    ``run_cohort_zero_copy`` compiles the tier's cohort function with
+    ``updates.flatten_rows`` folded onto the output: each update leaf is
+    written ONCE, directly in the ``(rows, size)`` ``UpdateBuffer`` layout
+    XLA can reduce at matmul speed (an in-graph reshape at aggregation time
+    falls off the BLAS/MXU path).  The pytree spec rows materialize to is
+    recovered by ``jax.eval_shape`` (abstract — nothing executes) and cached
+    per global-params signature.
+    """
+
+    _cohort_fn = None  # set by subclasses: (params, batches, rngs) -> (tree, metrics)
+
+    def _zero_copy_machinery(self):
+        if getattr(self, "_compiled_zc", None) is None:
+            fn = self._cohort_fn
+
+            def zc_fn(global_params, batches, rngs):
+                params, metrics = fn(global_params, batches, rngs)
+                return flatten_rows(params), metrics
+
+            def zc_fn_recycle(scratch, global_params, batches, rngs):
+                # ``scratch`` (a retired round's buffer leaves) is donated:
+                # XLA aliases the new update leaves onto its pages, so
+                # steady-state rounds allocate nothing buffer-sized — no
+                # fresh-page (mmap+zero) cost per round.  ``keep_unused``
+                # is REQUIRED: the default jit prunes arguments the traced
+                # function never reads, which would silently drop the
+                # donation (no aliasing, no invalidation).
+                del scratch
+                return zc_fn(global_params, batches, rngs)
+
+            self._compiled_zc = jax.jit(zc_fn)
+            self._compiled_zc_recycle = jax.jit(
+                zc_fn_recycle, donate_argnums=(0,), keep_unused=True)
+            self._spec_cache = {}
+        return self._compiled_zc
+
+    def run_cohort_zero_copy(
+        self,
+        global_params: Params,
+        batches: Batch,  # leaves shaped (cohort, ...)
+        rngs: jax.Array,  # (cohort, key)
+        recycle: UpdateBuffer | None = None,
+    ) -> tuple[UpdateBuffer, dict]:
+        """One fused dispatch producing the chunk's device-resident
+        ``UpdateBuffer`` (rows in device order) and stacked metrics.
+
+        ``recycle`` donates a retired buffer of the same layout so the new
+        update is written in place of it (see ``HybridSimulation``
+        ``recycle_buffers``); the donated buffer's arrays are invalidated.
+        """
+        compiled = self._zero_copy_machinery()
+        spec = self._update_spec(global_params, batches, rngs)
+        treedef, shapes, dtypes = spec
+        if recycle is not None and not (
+                recycle.num_rows == int(rngs.shape[0])
+                and recycle.treedef == treedef
+                and recycle.shapes == list(shapes)
+                and recycle.dtypes == list(dtypes)):
+            recycle = None  # layout changed: fall back to fresh allocation
+        if recycle is not None:
+            leaves2d, metrics = self._compiled_zc_recycle(
+                tuple(recycle.leaves2d), global_params, batches, rngs)
+        else:
+            leaves2d, metrics = compiled(global_params, batches, rngs)
+        return UpdateBuffer(jax.tree.leaves(leaves2d), *spec), metrics
+
+    def _update_spec(self, global_params, batches, rngs):
+        key = (jax.tree.structure(global_params),) + tuple(
+            (tuple(leaf.shape), str(leaf.dtype))
+            for leaf in jax.tree.leaves(global_params))
+        spec = self._spec_cache.get(key)
+        if spec is None:
+            out = jax.eval_shape(self._cohort_fn, global_params, batches, rngs)
+            spec = stacked_spec(out[0])
+            self._spec_cache[key] = spec
+        return spec
+
+class LogicalTier(_ZeroCopyCohortMixin):
     """Vectorized logical-simulation tier."""
 
     def __init__(
@@ -113,11 +208,23 @@ class LogicalTier:
         self.dtype = dtype
         self._compiled = None
 
-    def _build(self):
         vmapped = jax.vmap(self.local_train, in_axes=(0, 0, 0))
         if self.mesh is not None:
             vmapped = _shard_over_data(vmapped, self.mesh, self.data_axis, 3, 2)
-        return jax.jit(vmapped)
+
+        def cohort(global_params, batches, rngs):
+            # Stack INSIDE the compiled function: XLA fuses the cohort
+            # broadcast into the consumers instead of materializing an
+            # O(cohort x params) copy of the global params per chunk (the
+            # eager broadcast was the round engine's largest hidden
+            # allocation at big-model scale).
+            n = jax.tree.leaves(batches)[0].shape[0]
+            cast = lambda x: (x.astype(self.dtype)
+                              if jnp.issubdtype(x.dtype, jnp.floating) else x)
+            stacked = jax.tree.map(cast, _stack_params(global_params, n))
+            return vmapped(stacked, batches, rngs)
+
+        self._cohort_fn = cohort
 
     def run_cohort(
         self,
@@ -127,18 +234,16 @@ class LogicalTier:
         num_samples: np.ndarray,
     ) -> CohortResult:
         if self._compiled is None:
-            self._compiled = self._build()
+            self._compiled = jax.jit(self._cohort_fn)
         n = int(jax.tree.leaves(batches)[0].shape[0])
-        cast = lambda x: x.astype(self.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x
-        stacked = jax.tree.map(cast, _stack_params(global_params, n))
         rngs = jax.random.split(rng, n)
-        params, metrics = self._compiled(stacked, batches, rngs)
+        params, metrics = self._compiled(global_params, batches, rngs)
         return CohortResult(
             params=params, metrics=metrics, num_samples=jnp.asarray(num_samples)
         )
 
 
-class DeviceTier:
+class DeviceTier(_ZeroCopyCohortMixin):
     """Calibrated device-simulation tier for ONE device grade.
 
     Runs the same local computation through a numerically distinct backend
@@ -180,6 +285,16 @@ class DeviceTier:
         self.fleet = DeviceFleet(grade, 0, seed=seed, jitter=jitter)
         self.reports: list[RoundReport] = []
 
+        vmapped = jax.vmap(self._device_step, in_axes=(0, 0, 0))
+        if self.mesh is not None:
+            vmapped = _shard_over_data(vmapped, self.mesh, self.data_axis, 3, 2)
+
+        def cohort(global_params, batches, rngs):
+            n = jax.tree.leaves(batches)[0].shape[0]
+            return vmapped(_stack_params(global_params, n), batches, rngs)
+
+        self._cohort_fn = cohort
+
     # -- numerically-distinct backend: cast in, compute, cast back ---------
     def _device_step(self, global_params: Params, batch: Batch, rng: jax.Array):
         cast_in = lambda x: (
@@ -197,17 +312,6 @@ class DeviceTier:
         )
         return new_p, metrics
 
-    def _build_cohort(self):
-        vmapped = jax.vmap(self._device_step, in_axes=(0, 0, 0))
-        if self.mesh is not None:
-            vmapped = _shard_over_data(vmapped, self.mesh, self.data_axis, 3, 2)
-
-        def cohort(global_params, batches, rngs):
-            n = jax.tree.leaves(batches)[0].shape[0]
-            return vmapped(_stack_params(global_params, n), batches, rngs)
-
-        return jax.jit(cohort)
-
     def run_cohort(
         self,
         global_params: Params,
@@ -216,7 +320,7 @@ class DeviceTier:
     ) -> tuple[Params, dict]:
         """One XLA dispatch simulating a whole device cohort (bf16 backend)."""
         if self._vjit is None:
-            self._vjit = self._build_cohort()
+            self._vjit = jax.jit(self._cohort_fn)
         return self._vjit(global_params, batches, rngs)
 
     def sample_round(self, device_ids: np.ndarray, round_idx: int
@@ -358,6 +462,25 @@ class HybridSimulation:
     own fleet).  A single ``DeviceTier`` may still be passed positionally for
     the one-grade case; it is wrapped as ``{tier.grade.name: tier}`` and
     remains reachable as ``sim.device``.
+
+    **Zero-copy rounds** (default): cohort outputs stay stacked on device —
+    each chunk's result becomes one ``UpdateBuffer`` and every message
+    carries an ``UpdateHandle`` (buffer ref + row) instead of a materialized
+    host pytree, so the cohort loop never blocks on ``jax.device_get`` and
+    chunk k+1 dispatches while chunk k still computes.  Host pytrees are
+    materialized only for the q_i benchmarking devices (whose updates ride
+    next to their ``RoundReport`` telemetry) — and at checkpoint time, by
+    ``Checkpointer`` itself.  ``zero_copy=False`` keeps the PR 2
+    host-materializing path as the correctness/perf reference.
+
+    ``recycle_buffers=True`` additionally donates round k's update buffers
+    into round k+1's cohort dispatches: XLA writes the new updates in place
+    of the retired ones, so steady-state rounds allocate no buffer-sized
+    memory at all (at big-model scale, fresh multi-GB allocations cost a
+    kernel page-zeroing pass per round).  Only enable it when every handle
+    from round k is consumed before round k+1 runs (realtime dispatch with
+    an in-round trigger, as in the quickstart); a handle that outlives its
+    round would see its buffer invalidated by the donation.
     """
 
     def __init__(
@@ -367,7 +490,13 @@ class HybridSimulation:
         deviceflow: DeviceFlow | None = None,
         *,
         tiers: Mapping[str, DeviceTier] | None = None,
+        zero_copy: bool = True,
+        recycle_buffers: bool = False,
     ):
+        self.zero_copy = zero_copy
+        self.recycle_buffers = recycle_buffers
+        self._retired: dict = {}  # (tier id, rows) -> [UpdateBuffer]
+        self._staged: dict = {}
         self.logical = logical
         if tiers is not None and device is not None:
             raise ValueError("pass either device or tiers, not both")
@@ -405,10 +534,17 @@ class HybridSimulation:
         *,
         id_offset: int = 0,
         metrics_out: list | None = None,
+        materialize_rows: Sequence[int] = (),
     ) -> tuple[list[Message], jax.Array]:
         """Run one grade's split: [0, num_logical) through the logical tier,
         the rest through ``tier``'s device backend.  Returns the emitted
         messages (``device_id`` offset by ``id_offset``) and the advanced rng.
+
+        Zero-copy mode payloads are ``UpdateHandle``s into the chunk's
+        device-resident ``UpdateBuffer``; ``materialize_rows`` names the
+        grade-local rows (the q_i benchmarking devices) whose payloads are
+        materialized to host pytrees *after* every chunk has been dispatched,
+        so benchmarking never stalls the cohort pipeline.
         """
         n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
         if not 0 <= num_logical <= n_total:
@@ -416,9 +552,25 @@ class HybridSimulation:
         take = lambda tree, sl: jax.tree.map(lambda x: x[sl], tree)
         msgs: list[Message] = []
 
-        def emit(host_params, lo, hi):
-            # Flatten once per chunk; per-device payloads are then cheap
-            # leaf-index views instead of one jax.tree.map per message.
+        def emit_handles(buf: UpdateBuffer, lo, hi):
+            # Zero-copy: the chunk's update buffer stays on device; messages
+            # carry (buffer, row) handles.  No device_get, no host pytrees —
+            # the next chunk dispatches while this one still computes.
+            for j in range(hi - lo):
+                msgs.append(
+                    Message(
+                        task_id=task_id,
+                        device_id=id_offset + lo + j,
+                        round_idx=round_idx,
+                        payload=buf.handle(j),
+                        num_samples=int(num_samples[lo + j]),
+                    )
+                )
+
+        def emit_host(stacked_params, lo, hi):
+            # Host reference path (PR 2): block on device_get, flatten once
+            # per chunk, per-device payloads as cheap leaf-index views.
+            host_params = jax.device_get(stacked_params)
             leaves, treedef = jax.tree.flatten(host_params)
             for j in range(hi - lo):
                 msgs.append(
@@ -431,20 +583,41 @@ class HybridSimulation:
                     )
                 )
 
+        def run_chunk(sim_tier, lo, hi, sub):
+            # Same per-device rng derivation in both modes (run_cohort splits
+            # the chunk key identically), so zero_copy is numerics-preserving.
+            chunk = take(client_batches, slice(lo, hi))
+            rngs = jax.random.split(sub, hi - lo)
+            if self.zero_copy:
+                # The chunk's stacked output never leaves the device; the
+                # next chunk dispatches while this one still computes.
+                prev = None
+                key = (id(sim_tier), hi - lo)
+                if self.recycle_buffers and self._retired.get(key):
+                    prev = self._retired[key].pop()
+                buf, metrics = sim_tier.run_cohort_zero_copy(
+                    global_params, chunk, rngs, recycle=prev)
+                if self.recycle_buffers:
+                    self._staged.setdefault(key, []).append(buf)
+                emit_handles(buf, lo, hi)
+            elif sim_tier is self.logical:
+                res = sim_tier.run_cohort(
+                    global_params, chunk, sub, num_samples[lo:hi])
+                metrics = res.metrics
+                emit_host(res.params, lo, hi)
+            else:
+                out_params, metrics = sim_tier.run_cohort(
+                    global_params, chunk, rngs)
+                emit_host(out_params, lo, hi)
+            if metrics_out is not None:
+                metrics_out.append(metrics)
+
         # Logical tier: vectorized cohorts (chunked by cohort_size).
         idx = 0
         while idx < num_logical:
             hi = min(idx + self.logical.cohort_size, num_logical)
             rng, sub = jax.random.split(rng)
-            res = self.logical.run_cohort(
-                global_params,
-                take(client_batches, slice(idx, hi)),
-                sub,
-                num_samples[idx:hi],
-            )
-            if metrics_out is not None:
-                metrics_out.append(res.metrics)
-            emit(jax.device_get(res.params), idx, hi)
+            run_chunk(self.logical, idx, hi, sub)
             idx = hi
 
         # Device tier: vectorized cohorts through the bf16 backend — one
@@ -453,15 +626,16 @@ class HybridSimulation:
         while idx < n_total:
             hi = min(idx + tier.cohort_size, n_total)
             rng, sub = jax.random.split(rng)
-            new_p, dev_metrics = tier.run_cohort(
-                global_params,
-                take(client_batches, slice(idx, hi)),
-                jax.random.split(sub, hi - idx),
-            )
-            if metrics_out is not None:
-                metrics_out.append(dev_metrics)
-            emit(jax.device_get(new_p), idx, hi)
+            run_chunk(tier, idx, hi, sub)
             idx = hi
+
+        # Deferred host materialization: only the q_i benchmarking devices'
+        # updates become host pytrees, after the whole grade has dispatched.
+        for r in materialize_rows:
+            m = msgs[r]
+            if isinstance(m.payload, UpdateHandle):
+                msgs[r] = dataclasses.replace(
+                    m, payload=m.payload.materialize())
         return msgs, rng
 
     # -- grade-partitioned rounds (allocator-driven) -----------------------
@@ -530,6 +704,8 @@ class HybridSimulation:
                 tier, task_id, round_idx, global_params, batches, n_samples,
                 entry.num_logical, rng, id_offset=offset,
                 metrics_out=client_metrics,
+                materialize_rows=range(
+                    n_total - entry.num_benchmarking, n_total),
             )
             msgs.extend(grade_msgs)
 
@@ -565,6 +741,8 @@ class HybridSimulation:
             # The round ends when the slowest device reports, not at clock.now.
             self.deviceflow.round_complete(
                 task_id, t=float(np.max(arrival_times)))
+        if self.recycle_buffers:
+            self._retired, self._staged = self._staged, {}
         return FederatedRoundOutcome(
             num_logical=sum(e.num_logical for e in plan.entries),
             num_physical=sum(e.num_physical + e.num_benchmarking
@@ -598,10 +776,12 @@ class HybridSimulation:
         """
         tier = self.device
         n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
+        n_bench_rows = min(max(benchmark_devices, 0), n_total - num_logical)
         metrics: list = []
         msgs, _ = self._run_split(
             tier, task_id, round_idx, global_params, client_batches,
-            np.asarray(num_samples), num_logical, rng, metrics_out=metrics)
+            np.asarray(num_samples), num_logical, rng, metrics_out=metrics,
+            materialize_rows=range(num_logical, num_logical + n_bench_rows))
         reports: list[RoundReport] = []
 
         # Behavioral side: one vectorized fleet sample covers every simulated
@@ -638,6 +818,8 @@ class HybridSimulation:
                      if arrival_times is not None and len(arrival_times)
                      else None)
             self.deviceflow.round_complete(task_id, t=t_end)
+        if self.recycle_buffers:
+            self._retired, self._staged = self._staged, {}
         return FederatedRoundOutcome(
             num_logical=num_logical,
             num_physical=n_total - num_logical,

@@ -1,0 +1,192 @@
+"""Device-resident update buffers and handle payloads (zero-copy round path).
+
+The batched round engine produces one *stacked* model update per cohort chunk
+(pytree leaves shaped ``(rows, ...)``).  The PR 2 engine blocked on
+``jax.device_get`` of that stack after every chunk and built one host pytree
+per device as the ``Message.payload`` — O(devices x leaves) host transfer and
+Python tree traffic per round.  The zero-copy path instead wraps each chunk's
+output in an :class:`UpdateBuffer` that *stays on device*, and hands each
+message an :class:`UpdateHandle` — a (buffer, row) reference that weighs a
+few dozen bytes on the wire between the simulation tiers and the cloud
+service.  Aggregation never materializes: ``federation.fused_fedavg_delta``
+groups the pending handles by buffer and runs one fused weighted
+row-reduction per leaf per buffer (the ``kernels/fed_reduce`` Pallas kernel
+on TPU) directly over the device arrays, in a single XLA dispatch.
+
+**Layout.**  Buffer leaves are stored as ``(rows, size)`` 2-D matrices — the
+tiers fold the flattening reshape into the cohort jit itself, where XLA
+fuses it into the producers (a bitcast, not a copy).  This is deliberate:
+the weighted row-reduction on a 2-D operand lowers to a BLAS/MXU matmul,
+while reducing an ``(n, ...)``-shaped operand (or reshaping it in-graph)
+falls off that path entirely (~40x slower on CPU XLA).  The pytree view
+(``treedef`` + per-leaf trailing shapes/dtypes) rides alongside for
+materialization and alignment checks.
+
+Handles materialize to host pytrees only where the platform genuinely needs
+host data:
+
+* the q_i benchmarking devices (their updates ride next to the full
+  ``RoundReport`` telemetry, paper §IV.C);
+* checkpointing (``Checkpointer`` calls :func:`materialize_handles` so saved
+  state never contains live device references);
+* payload transforms that are host-side by nature (e.g. top-k compression in
+  ``launch/train.py``).
+
+Buffers are freed by ordinary garbage collection: once the aggregation
+service consumes the round's messages and drops them, no handle references
+the buffer and the device memory is released.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # pytree
+
+
+def flatten_rows(stacked: Params) -> Params:
+    """Per-leaf ``(rows, ...) -> (rows, size)`` reshape (jit-safe).
+
+    Inside a compiled cohort function this is free — XLA writes the output
+    directly in the 2-D layout.  Eagerly it dispatches one reshape per leaf.
+    """
+    return jax.tree.map(lambda leaf: jnp.reshape(leaf, (leaf.shape[0], -1)),
+                        stacked)
+
+
+def stacked_spec(stacked: Params) -> tuple[Any, list[tuple], list[np.dtype]]:
+    """(treedef, per-leaf trailing shapes, per-leaf dtypes) of a stacked tree
+    (works on concrete arrays and on ``jax.eval_shape`` results alike)."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    shapes = [tuple(leaf.shape[1:]) for leaf in leaves]
+    dtypes = [np.dtype(leaf.dtype) for leaf in leaves]
+    return treedef, shapes, dtypes
+
+
+class UpdateBuffer:
+    """One cohort chunk's stacked model update, resident on device.
+
+    ``leaves2d`` are the update's leaves as ``(rows, size)`` device matrices
+    (one row per simulated device); ``treedef``/``shapes``/``dtypes``
+    describe the pytree each row materializes to.  The buffer never copies
+    device data — it just records the layout so handles can report real
+    payload sizes, aggregation can check alignment against the global
+    params, and single rows can materialize on demand.
+    """
+
+    __slots__ = ("leaves2d", "treedef", "shapes", "dtypes", "num_rows",
+                 "row_nbytes", "__weakref__")
+
+    def __init__(self, leaves2d: Sequence[jax.Array], treedef,
+                 shapes: Sequence[tuple], dtypes: Sequence[Any]):
+        leaves2d = list(leaves2d)
+        if not leaves2d:
+            raise ValueError("UpdateBuffer needs at least one leaf")
+        n = int(leaves2d[0].shape[0])
+        if n < 1:
+            raise ValueError("UpdateBuffer needs at least one row")
+        self.shapes = [tuple(s) for s in shapes]
+        self.dtypes = [np.dtype(d) for d in dtypes]
+        for leaf, shape in zip(leaves2d, self.shapes):
+            if leaf.ndim != 2 or int(leaf.shape[0]) != n:
+                raise ValueError(
+                    f"buffer leaves must be (rows, size), got {leaf.shape}")
+            if int(leaf.shape[1]) != math.prod(shape):
+                raise ValueError(
+                    f"leaf carries {leaf.shape[1]} elements but the spec "
+                    f"shape {shape} needs {math.prod(shape)}")
+        if not (len(leaves2d) == len(self.shapes) == len(self.dtypes)):
+            raise ValueError("leaves/shapes/dtypes must align")
+        self.leaves2d = leaves2d
+        self.treedef = treedef
+        self.num_rows = n
+        self.row_nbytes = int(sum(
+            math.prod(s) * d.itemsize
+            for s, d in zip(self.shapes, self.dtypes)))
+
+    @classmethod
+    def from_stacked(cls, stacked: Params) -> "UpdateBuffer":
+        """Build from a stacked pytree (leaves ``(rows, ...)``).
+
+        Flattens eagerly — one reshape dispatch per leaf.  The round engine
+        avoids even that by folding :func:`flatten_rows` into the cohort jit
+        (``run_cohort_zero_copy``); this constructor serves tests and ad-hoc
+        callers.
+        """
+        leaves = jax.tree.leaves(stacked)
+        if not leaves:
+            raise ValueError("UpdateBuffer needs at least one leaf")
+        n = int(leaves[0].shape[0]) if leaves[0].ndim else -1
+        if any(leaf.ndim < 1 or int(leaf.shape[0]) != n for leaf in leaves):
+            raise ValueError(
+                "every stacked leaf must share the leading (row) dimension")
+        return cls(jax.tree.leaves(flatten_rows(stacked)),
+                   *stacked_spec(stacked))
+
+    def handle(self, row: int) -> "UpdateHandle":
+        return UpdateHandle(self, row)
+
+    def handles(self) -> list["UpdateHandle"]:
+        return [UpdateHandle(self, r) for r in range(self.num_rows)]
+
+    def materialize_row(self, row: int) -> Params:
+        """One device's update as a host pytree (blocks on this buffer)."""
+        if not 0 <= row < self.num_rows:
+            raise IndexError(f"row {row} out of range [0, {self.num_rows})")
+        out = [np.asarray(leaf[row]).reshape(shape).astype(dt, copy=False)
+               for leaf, shape, dt in zip(self.leaves2d, self.shapes,
+                                          self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def materialize(self) -> Params:
+        """The whole stacked update as a host pytree."""
+        out = [np.asarray(leaf).reshape((self.num_rows,) + shape)
+               .astype(dt, copy=False)
+               for leaf, shape, dt in zip(self.leaves2d, self.shapes,
+                                          self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def __repr__(self) -> str:
+        return (f"UpdateBuffer(rows={self.num_rows}, "
+                f"leaves={len(self.shapes)}, row_nbytes={self.row_nbytes})")
+
+
+class UpdateHandle:
+    """Lightweight ``Message.payload``: a (buffer, row) reference.
+
+    ``nbytes`` reports the row's real model-update size, so DeviceFlow
+    traffic accounting sees the bytes a physical device would have uploaded —
+    not the size of the reference.
+    """
+
+    __slots__ = ("buffer", "row", "__weakref__")
+
+    def __init__(self, buffer: UpdateBuffer, row: int):
+        if not 0 <= row < buffer.num_rows:
+            raise IndexError(
+                f"row {row} out of range [0, {buffer.num_rows})")
+        self.buffer = buffer
+        self.row = row
+
+    @property
+    def nbytes(self) -> int:
+        return self.buffer.row_nbytes
+
+    def materialize(self) -> Params:
+        return self.buffer.materialize_row(self.row)
+
+    def __repr__(self) -> str:
+        return f"UpdateHandle(row={self.row}, nbytes={self.nbytes})"
+
+
+def materialize_handles(tree: Any) -> Any:
+    """Replace every ``UpdateHandle``/``UpdateBuffer`` in ``tree`` with its
+    materialized host pytree (checkpointing hook — saved state must not
+    contain live device references)."""
+    is_ref = lambda x: isinstance(x, (UpdateHandle, UpdateBuffer))
+    return jax.tree.map(
+        lambda x: x.materialize() if is_ref(x) else x, tree, is_leaf=is_ref)

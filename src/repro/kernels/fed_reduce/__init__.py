@@ -1,0 +1,3 @@
+from repro.kernels.fed_reduce.ops import fed_reduce, fed_reduce_ref
+
+__all__ = ["fed_reduce", "fed_reduce_ref"]

@@ -1,0 +1,49 @@
+"""Public entry point for the fused federated update reduction.
+
+``fed_reduce`` reduces one stacked ``(rows, ...)`` leaf to an *unnormalized*
+weighted sum, so partial reductions over several buffers can be combined
+before dividing by the total weight (see ``federation.fused_fedavg_delta``,
+which maps it over every ``(rows, size)`` leaf of an ``UpdateBuffer``).
+
+Implementations:
+
+* ``pallas`` — the TPU kernel (MXU matmul accumulation, f32);
+* ``pallas_interpret`` — the same kernel under the Pallas interpreter, the
+  CPU-CI correctness path;
+* ``ref`` — fused jnp ``tensordot`` (also the fast CPU execution path);
+* ``auto`` — ``pallas`` on TPU, ``ref`` elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fed_reduce.fed_reduce import fed_reduce_pallas
+from repro.kernels.fed_reduce.ref import fed_reduce_ref
+
+__all__ = ["fed_reduce", "fed_reduce_ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fed_reduce(stack: jax.Array, weights: jax.Array, *,
+               impl: str = "auto") -> jax.Array:
+    """Weighted row-sum ``sum_i weights[i] * stack[i]`` -> f32 ``stack[0]``
+    shape.  ``stack``: (n, ...); ``weights``: (n,)."""
+    if stack.ndim < 1 or stack.shape[0] != weights.shape[0]:
+        raise ValueError(
+            f"stack rows {stack.shape} must match weights {weights.shape}")
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return fed_reduce_ref(stack, weights)
+    if impl in ("pallas", "pallas_interpret"):
+        n = stack.shape[0]
+        flat = stack.reshape(n, -1)
+        out = fed_reduce_pallas(
+            flat, weights,
+            interpret=(impl == "pallas_interpret" or not _on_tpu()))
+        return out.reshape(stack.shape[1:])
+    raise ValueError(f"unknown impl {impl!r}")

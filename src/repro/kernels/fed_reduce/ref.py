@@ -1,0 +1,27 @@
+"""Pure-jnp reference for the fused federated weighted reduction.
+
+``fed_reduce_ref`` is the single-leaf oracle (f32 accumulation, like the
+kernel) and also the fast CPU execution path when no TPU is attached
+(``impl="auto"`` outside TPU) — one fused XLA op, not a Python loop.
+
+Perf note: keep the operand 2-D at the call site.  A >2-D ``stack`` forces
+the ``reshape`` below into the compiled graph, which knocks XLA CPU off the
+BLAS matmul path for the reduction (~40x slower); the round engine's
+``UpdateBuffer`` stores leaves as ``(rows, size)`` for exactly this reason.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fed_reduce_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted row-sum ``out = sum_i weights[i] * stack[i]`` in f32.
+
+    ``stack``: (n, ...) — any trailing shape; ``weights``: (n,).  Returns the
+    trailing shape in float32 (accumulation dtype; callers cast).
+    """
+    n = stack.shape[0]
+    flat = stack.reshape(n, -1).astype(jnp.float32)
+    out = jnp.tensordot(weights.astype(jnp.float32), flat, axes=1)
+    return out.reshape(stack.shape[1:])

@@ -45,6 +45,7 @@ from repro.core.simulation import (
 from repro.core.strategies import AccumulatedStrategy, TimeIntervalStrategy
 from repro.core.task import GradeSpec
 from repro.core.traffic_curves import right_tailed_normal
+from repro.core.updates import UpdateHandle
 from repro.data.tokens import TokenPipeline
 from repro.distribution.sharding import derive_logical_mesh
 from repro.distribution.steps import build_train_step, init_train_state
@@ -190,11 +191,26 @@ def federated_training(args) -> dict:
         if args.compress:
             packed = []
             for m in msgs:
+                # Top-k compression is a host-side payload transform: zero-
+                # copy handle payloads materialize here (the compressed
+                # payload *is* the simulated wire format).
+                payload = (m.payload.materialize()
+                           if isinstance(m.payload, UpdateHandle)
+                           else m.payload)
                 if comp_state is None:
-                    comp_state = topk_init(m.payload)
-                payload, comp_state, _ = topk_compress(
-                    m.payload, comp_state, fraction=args.compress_fraction)
-                packed.append(dataclasses.replace(m, payload=payload))
+                    comp_state = topk_init(payload)
+                payload, comp_state, stats = topk_compress(
+                    payload, comp_state, fraction=args.compress_fraction)
+                # Top-k keeps a dense-layout tree, so recompute the wire
+                # size from what a sparse encoding would actually ship
+                # (value + int32 index per kept entry) — otherwise traffic
+                # accounting would report the uncompressed payload size.
+                # Floor at one entry: size_bytes=0 means "unset" to
+                # Message.__post_init__, which would substitute the full
+                # dense payload size for an all-zero update.
+                packed.append(dataclasses.replace(
+                    m, payload=payload,
+                    size_bytes=max(stats["nonzero"], 1) * 8))
             msgs = packed
         # Bulk Sorter path: fleet-sampled round durations as arrival times.
         arrivals = flow.clock.now + np.asarray(outcome.arrival_times)

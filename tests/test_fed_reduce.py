@@ -1,0 +1,316 @@
+"""Zero-copy round pipeline: fed_reduce kernel, handles, donation, sizes."""
+import dataclasses
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.deviceflow import DeviceFlow, Delivery, Message, payload_nbytes
+from repro.core.devicemodel import GRADES
+from repro.core.federation import (
+    AggregationService,
+    ClientCountTrigger,
+    fedavg_delta,
+    fused_fedavg_delta,
+    handles_align,
+)
+from repro.core.simulation import DeviceTier, HybridSimulation, LogicalTier
+from repro.core.strategies import AccumulatedStrategy
+from repro.core.updates import UpdateBuffer, UpdateHandle, materialize_handles
+from repro.kernels.fed_reduce.ops import fed_reduce
+from repro.models import ctr as ctr_lib
+
+
+def _rand_tree(rng, n, dtype):
+    return {
+        "w": jnp.asarray(rng.standard_normal((n, 4, 8)), dtype),
+        "b": jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Kernel vs host reference (interpret mode — the CPU CI path)
+# --------------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 12), seed=st.integers(0, 10_000),
+       use_bf16=st.integers(0, 1), weight_scale=st.floats(0.1, 50.0))
+def test_fused_fedavg_matches_host_reference(n, seed, use_bf16, weight_scale):
+    """Property: the Pallas fed-reduce path (interpret mode) reproduces the
+    host per-message ``fedavg_delta`` chain across dtypes and weights."""
+    rng = np.random.default_rng(seed)
+    dtype = jnp.bfloat16 if use_bf16 else jnp.float32
+    stacked = _rand_tree(rng, n, dtype)
+    global_params = {
+        "w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal(3), jnp.float32),
+    }
+    weights = (rng.random(n) * weight_scale + 1e-3).tolist()
+
+    host_updates = [
+        jax.tree.map(lambda x: np.asarray(x[i], np.float32), stacked)
+        for i in range(n)
+    ]
+    want = fedavg_delta(global_params, host_updates, weights, server_lr=0.7)
+
+    buf = UpdateBuffer.from_stacked(stacked)
+    got = fused_fedavg_delta(global_params, buf.handles(), weights,
+                             server_lr=0.7, impl="pallas_interpret")
+    tol = 3e-2 if use_bf16 else 1e-5
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 64), d=st.integers(1, 300), seed=st.integers(0, 999))
+def test_fed_reduce_kernel_matches_ref_impl(n, d, seed):
+    rng = np.random.default_rng(seed)
+    stack = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    ref = fed_reduce(stack, w, impl="ref")
+    pal = fed_reduce(stack, w, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_zero_staleness_weights_fall_back_to_uniform():
+    """All-zero staleness weights must hit the uniform fallback on the
+    zero-copy path too (not crash the delivery callback)."""
+    stacked = {"w": jnp.asarray([[2.0], [4.0]])}
+    buf = UpdateBuffer.from_stacked(stacked)
+    svc = AggregationService(
+        {"w": jnp.zeros(1)},
+        trigger=ClientCountTrigger(2),
+        staleness_discount=lambda s: 0.0,
+    )
+    for i, h in enumerate(buf.handles()):
+        svc(Delivery(t=0.0, message=Message(0, i, 0, h, num_samples=i + 1)))
+    assert len(svc.history) == 1
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]), [3.0])
+
+
+def test_fused_rejects_misaligned_handles():
+    stacked = {"other": jnp.ones((2, 3))}
+    buf = UpdateBuffer.from_stacked(stacked)
+    g = {"w": jnp.zeros(3)}
+    assert not handles_align(g, buf.handles())
+    with pytest.raises(ValueError, match="align"):
+        fused_fedavg_delta(g, buf.handles(), [1.0, 1.0])
+
+
+def test_service_materializes_mixed_payload_batch():
+    """A mixed handle/host pending set must aggregate via the host reference
+    path (handles materialized), not crash."""
+    buf = UpdateBuffer.from_stacked({"w": jnp.asarray([[2.0]])})
+    svc = AggregationService({"w": jnp.zeros(1)},
+                             trigger=ClientCountTrigger(2))
+    svc(Delivery(t=0.0, message=Message(0, 0, 0, buf.handle(0),
+                                        num_samples=1)))
+    svc(Delivery(t=0.0, message=Message(0, 1, 0, {"w": np.array([4.0])},
+                                        num_samples=1)))
+    assert len(svc.history) == 1
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]), [3.0])
+
+
+# --------------------------------------------------------------------------- #
+# Donation — the old global-params buffer is actually invalidated
+# --------------------------------------------------------------------------- #
+def test_donation_invalidates_old_global_params():
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)}
+    buf = UpdateBuffer.from_stacked(stacked)
+    keep = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    out = fused_fedavg_delta(keep, buf.handles(), [1.0] * 4, donate=False)
+    assert not keep["w"].is_deleted()
+
+    donated = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    out2 = fused_fedavg_delta(donated, buf.handles(), [1.0] * 4, donate=True)
+    assert donated["w"].is_deleted()
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(out2["w"]),
+                               atol=2e-6)
+
+
+def test_recycle_buffers_donates_retired_round_buffers():
+    """``recycle_buffers=True`` must actually donate: round k's update
+    buffers are invalidated when round k+1 writes in their place (guards
+    against jit pruning the unused donated arg — keep_unused)."""
+    from repro.core.federation import SampleThresholdTrigger
+
+    local, params, batches, counts = _round_setup()
+    svc = AggregationService(
+        jax.tree.map(jnp.array, params),
+        trigger=SampleThresholdTrigger(int(counts.sum())))
+    flow = DeviceFlow(svc)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    sim = HybridSimulation(LogicalTier(local, cohort_size=16),
+                           DeviceTier(local, GRADES["High"]),
+                           deviceflow=flow, zero_copy=True,
+                           recycle_buffers=True)
+    out0 = sim.run_round(0, 0, svc.global_params, batches, counts, 12,
+                         jax.random.PRNGKey(0))
+    bufs0 = {id(m.payload.buffer): m.payload.buffer for m in out0.messages}
+    assert all(not leaf.is_deleted()
+               for b in bufs0.values() for leaf in b.leaves2d)
+    sim.run_round(0, 1, svc.global_params, batches, counts, 12,
+                  jax.random.PRNGKey(1))
+    # Round 1 recycled round 0's retired buffers: their arrays are gone.
+    assert all(leaf.is_deleted()
+               for b in bufs0.values() for leaf in b.leaves2d)
+
+
+def test_service_donate_params_recycles_buffers():
+    buf = UpdateBuffer.from_stacked({"w": jnp.asarray([[1.0], [3.0]])})
+    svc = AggregationService({"w": jnp.zeros(1)},
+                             trigger=ClientCountTrigger(2),
+                             donate_params=True)
+    g0 = svc.global_params
+    for i, h in enumerate(buf.handles()):
+        svc(Delivery(t=0.0, message=Message(0, i, 0, h, num_samples=1)))
+    assert len(svc.history) == 1
+    assert g0["w"].is_deleted()  # donated into the new round's params
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]), [2.0])
+
+
+# --------------------------------------------------------------------------- #
+# Round engine: zero-copy path reproduces the host-materializing path
+# --------------------------------------------------------------------------- #
+def _round_setup(n=12, rpd=8, dim=16):
+    from repro.data.synthetic_ctr import make_federated_ctr
+    data = make_federated_ctr(num_devices=n, records_per_device=rpd,
+                              dim=dim, seed=0)
+    local = ctr_lib.make_local_train_fn(lr=1e-2, epochs=2)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    X, Y, counts = data.stacked_shards(np.arange(n), rpd)
+    mask = (np.arange(rpd)[None] < counts[:, None]).astype(np.float32)
+    batches = {"x": jnp.asarray(X), "y": jnp.asarray(Y),
+               "mask": jnp.asarray(mask)}
+    return local, params, batches, counts
+
+
+@pytest.mark.parametrize("num_logical", [12, 7, 0])
+def test_zero_copy_round_matches_host_round(num_logical):
+    from repro.core.federation import SampleThresholdTrigger
+
+    def run(zero_copy):
+        local, params, batches, counts = _round_setup()
+        svc = AggregationService(
+            jax.tree.map(jnp.array, params),
+            trigger=SampleThresholdTrigger(int(counts.sum())))
+        flow = DeviceFlow(svc)
+        flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+        sim = HybridSimulation(LogicalTier(local, cohort_size=5),
+                               DeviceTier(local, GRADES["High"],
+                                          cohort_size=4),
+                               deviceflow=flow, zero_copy=zero_copy)
+        for rnd in range(2):
+            out = sim.run_round(0, rnd, svc.global_params, batches, counts,
+                                num_logical, jax.random.PRNGKey(rnd),
+                                benchmark_devices=2)
+        return svc.global_params, out
+
+    (pa, outa), (pb, outb) = run(True), run(False)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # Zero-copy: handle payloads except the benchmarking devices' rows,
+    # which materialize to host pytrees (and only those).
+    n_handles = sum(isinstance(m.payload, UpdateHandle)
+                    for m in outa.messages)
+    n_host = sum(isinstance(m.payload, dict) for m in outa.messages)
+    n_bench = min(2, 12 - num_logical)
+    assert n_host == n_bench and n_handles == 12 - n_bench
+    # Host path: everything materialized.
+    assert all(isinstance(m.payload, dict) for m in outb.messages)
+    # Handle payloads report the real per-row update size.
+    if n_handles:
+        h = next(m for m in outa.messages
+                 if isinstance(m.payload, UpdateHandle))
+        ref = next(m for m in outb.messages)
+        assert h.size_bytes == ref.size_bytes > 0
+
+
+def test_plan_round_materializes_only_benchmarking_tail():
+    """Grade-partitioned rounds: the q_i allocator-excluded tail rows carry
+    host pytrees; every other message carries a handle."""
+    from repro.core.simulation import GradePlanEntry, RoundPlan
+
+    local, params, batches, counts = _round_setup(n=10)
+    plan = RoundPlan((GradePlanEntry("High", 4, 4, 2),))
+    sim = HybridSimulation(
+        LogicalTier(local, cohort_size=4),
+        tiers={"High": DeviceTier(local, GRADES["High"], cohort_size=4)})
+    out = sim.run_plan_round(0, 0, params, plan, {"High": batches},
+                             {"High": counts}, jax.random.PRNGKey(0))
+    by_id = {m.device_id: m.payload for m in out.messages}
+    for dev in range(8):
+        assert isinstance(by_id[dev], UpdateHandle)
+    for dev in (8, 9):  # q_i tail
+        assert isinstance(by_id[dev], dict)
+
+
+# --------------------------------------------------------------------------- #
+# Message slots / auto size accounting / Shelf byte counters
+# --------------------------------------------------------------------------- #
+def test_message_is_slotted_weakrefable_and_sizes_payloads():
+    m = Message(0, 1, 2, {"w": np.zeros((4, 4), np.float32),
+                          "b": np.zeros(3)})
+    assert not hasattr(m, "__dict__")
+    assert weakref.ref(m)() is m
+    assert m.size_bytes == 4 * 4 * 4 + 3 * 8
+    # replace() keeps the computed size; explicit size wins over payload.
+    assert dataclasses.replace(m, created_t=1.0).size_bytes == m.size_bytes
+    assert Message(0, 0, 0, None, size_bytes=77).size_bytes == 77
+    assert Message(0, 0, 0, payload=5).size_bytes == 0
+    assert payload_nbytes([np.zeros(2), {"x": np.zeros(3)}]) == 2 * 8 + 3 * 8
+
+
+def test_shelf_tracks_real_traffic_bytes():
+    got = []
+    flow = DeviceFlow(got.append)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(2,)))
+    buf = UpdateBuffer.from_stacked({"w": jnp.zeros((3, 5), jnp.float32)})
+    for i in range(3):
+        flow.submit(Message(0, i, 0, buf.handle(i)), t=1.0)
+    shelf = flow.shelf(0)
+    assert shelf.total_bytes_received == 3 * 20
+    assert shelf.total_bytes_dispatched == 2 * 20  # one message still shelved
+    state = flow.state_dict()
+    restored = DeviceFlow(got.append)
+    restored.register_task(0, AccumulatedStrategy(thresholds=(2,)))
+    restored.load_state_dict(state)
+    assert restored.shelf(0).total_bytes_received == 3 * 20
+
+
+# --------------------------------------------------------------------------- #
+# Checkpointing materializes handles
+# --------------------------------------------------------------------------- #
+def test_checkpointer_materializes_handles(tmp_path):
+    stacked = {"w": jnp.asarray(np.arange(6, dtype=np.float32).reshape(3, 2))}
+    buf = UpdateBuffer.from_stacked(stacked)
+    tree = {"pending": buf.handle(1), "step": jnp.asarray(4)}
+    ck = Checkpointer(tmp_path)
+    ck.save(1, tree)
+    like = {"pending": {"w": np.zeros(2, np.float32)},
+            "step": np.asarray(0)}
+    restored, _ = ck.restore(like)
+    np.testing.assert_array_equal(restored["pending"]["w"], [2.0, 3.0])
+
+    host = materialize_handles({"a": [buf.handle(0)], "b": buf})
+    np.testing.assert_array_equal(host["a"][0]["w"], [0.0, 1.0])
+    assert host["b"]["w"].shape == (3, 2)
+
+
+def test_update_buffer_validation_and_repr():
+    with pytest.raises(ValueError):
+        UpdateBuffer.from_stacked({"a": jnp.zeros((2, 3)), "b": jnp.zeros((4, 3))})
+    buf = UpdateBuffer.from_stacked({"a": jnp.zeros((2, 3), jnp.float32)})
+    assert buf.row_nbytes == 12
+    assert "rows=2" in repr(buf)
+    with pytest.raises(IndexError):
+        buf.handle(2)
+    h = buf.handle(1)
+    assert h.nbytes == 12 and "row=1" in repr(h)
