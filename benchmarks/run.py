@@ -31,11 +31,12 @@ from benchmarks import common  # noqa: E402
 from benchmarks.paper_benchmarks import ALL_BENCHMARKS  # noqa: E402
 
 QUICK_BENCHMARKS = ("fig8_device_tier_batched", "multi_grade_round",
-                    "round_pipeline")
+                    "round_pipeline", "multi_task_schedule")
 
 # Throughput-ish metrics worth tracking across PRs (higher is better except
-# slowdown; the diff just reports the ratio either way).
-DIFF_METRICS = ("devices_per_s", "speedup", "slowdown", "per_device_us")
+# slowdown/makespan_s; the diff just reports the ratio either way).
+DIFF_METRICS = ("devices_per_s", "speedup", "slowdown", "per_device_us",
+                "makespan_s")
 
 
 def parse_derived(derived: str) -> dict:

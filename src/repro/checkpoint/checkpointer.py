@@ -27,6 +27,25 @@ import numpy as np
 from repro.core.updates import materialize_handles
 
 
+def _jsonify(obj: Any) -> Any:
+    """JSON-safe view of manifest ``extra`` state.
+
+    Engine/service state_dicts carry numpy scalars (virtual-time stamps),
+    small arrays, and tuples (resource grants); ``json.dumps`` rejects the
+    numpy types outright, so normalize here instead of pushing the
+    conversion burden onto every caller.
+    """
+    if isinstance(obj, dict):
+        return {str(k): _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return obj
+
+
 def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -70,7 +89,7 @@ class Checkpointer:
                 "num_hosts": self.num_hosts,
                 "keys": [k for k, _ in leaves],
                 "time": time.time(),
-                "extra": extra or {},
+                "extra": _jsonify(extra or {}),
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             target = self._step_dir(step)

@@ -29,8 +29,12 @@ from repro.core.updates import (
     materialize_handles,
 )
 from repro.core.scheduler import (
+    DrainResult,
     ResourceManager,
     ResourcePool,
+    StrandedTasksError,
+    TaskEngine,
+    TaskExecution,
     TaskManager,
     TaskRunner,
     TaskScheduler,
@@ -65,7 +69,8 @@ __all__ = [
     "ScheduledTrigger", "fedavg_delta", "fused_fedavg_delta",
     "handles_align", "polynomial_staleness", "weighted_average",
     "UpdateBuffer", "UpdateHandle", "materialize_handles",
-    "ResourceManager", "ResourcePool", "TaskManager", "TaskRunner", "TaskScheduler",
+    "DrainResult", "ResourceManager", "ResourcePool", "StrandedTasksError",
+    "TaskEngine", "TaskExecution", "TaskManager", "TaskRunner", "TaskScheduler",
     "AccumulatedStrategy", "DispatchPoint", "TimeIntervalStrategy",
     "TimePointStrategy", "discretize_curve",
     "GradeSpec", "OperatorFlow", "Task", "TaskQueue", "register_operator",

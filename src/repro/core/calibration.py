@@ -165,6 +165,46 @@ class RuntimeCalibrator:
         """Adapter matching ``TaskRunner``'s ``runtimes`` callable contract."""
         return self.runtimes_for(task.grades)
 
+    def sample_for_task(self, task, rng: np.random.Generator
+                        ) -> list[GradeRuntime]:
+        """Sampled (not mean) runtimes for a task's grades.
+
+        The event engine calls this when constructed with a
+        ``duration_rng``: each scheduled round's timestamp is solved from one
+        *observed* round per grade, so event times carry the fleet's measured
+        round-to-round jitter instead of collapsing to the mean (the
+        Monte-Carlo makespan direction from the PR 2 notes).
+        """
+        return self.sample_runtimes(task.grades, rng)
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Resume-safe observation state (plain floats, JSON-friendly).
+
+        A checkpointed ``TaskEngine`` re-solves allocations on restore with
+        whatever runtimes provider it is given; when that provider is a
+        calibrator, restoring these observations is what makes the resumed
+        timeline reproduce the saved one (``table1_runtime`` cold-start
+        fallbacks would otherwise replace the measured runtimes mid-task).
+        """
+        return {
+            grade: {"total_s": list(obs.total_s),
+                    "launch_s": list(obs.launch_s),
+                    "train_s": list(obs.train_s),
+                    "logical_s": list(obs.logical_s)}
+            for grade, obs in self._obs.items()
+        }
+
+    def load_state_dict(self, d: Mapping) -> None:
+        self._obs.clear()
+        for grade, obs in d.items():
+            self._obs[grade] = _GradeObservations(
+                total_s=[float(x) for x in obs["total_s"]],
+                launch_s=[float(x) for x in obs["launch_s"]],
+                train_s=[float(x) for x in obs["train_s"]],
+                logical_s=[float(x) for x in obs["logical_s"]],
+            )
+
     def sample_runtimes(self, grades: Iterable, rng: np.random.Generator
                         ) -> list[GradeRuntime]:
         """Draw one observed round per grade instead of the mean.

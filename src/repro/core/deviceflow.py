@@ -288,6 +288,30 @@ class VirtualClock:
             fn()
         self.now = max(self.now, min(t_end, self.now) if t_end == float("inf") else t_end)
 
+    def next_time(self) -> float | None:
+        """Timestamp of the earliest pending event (None when idle)."""
+        return self._heap[0][0] if self._heap else None
+
+    def run_one(self) -> bool:
+        """Execute only the earliest pending event; False when idle.
+
+        Single-stepping hook for event-boundary logic (the task engine's
+        admission checks run between events, not between rounds).
+        """
+        if not self._heap:
+            return False
+        t, _, fn = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        fn()
+        return True
+
+    def advance(self, dt: float) -> None:
+        """Run every event inside the next ``dt`` virtual seconds and leave
+        ``now`` at the end of the window (serial round accounting)."""
+        if dt < 0:
+            raise ValueError("cannot advance the clock backwards")
+        self.run_until(self.now + dt)
+
     def pending(self) -> int:
         return len(self._heap)
 

@@ -22,6 +22,17 @@ over each stacked buffer (the ``kernels/fed_reduce`` Pallas kernel on TPU, a
 fused ``tensordot`` elsewhere).  The per-message host path below
 (``weighted_average``/``fedavg_delta``) is kept as the correctness reference
 and still serves mixed/host payloads.
+
+**Streaming chunk aggregation** (``streaming=True``): instead of holding
+every pending message until the trigger fires and reducing in one shot, the
+service accumulates per-buffer weight vectors as handle deliveries land and
+fires a ``fed_reduce`` *partial* the moment a cohort chunk's ``UpdateBuffer``
+is fully referenced — FedBuff-style running weighted partial sums, dispatched
+asynchronously so reduction overlaps the remaining chunks' compute instead of
+serializing after the round.  At trigger time the partials (plus any
+incomplete chunks and host-path stragglers) fold into the same server-delta
+update the one-shot fused path applies, matching ``fused_fedavg_delta``
+numerics to ~1e-6 across chunk orderings and staleness weights.
 """
 from __future__ import annotations
 
@@ -34,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.deviceflow import Delivery, Message
-from repro.core.updates import UpdateHandle
+from repro.core.updates import UpdateHandle, materialize_handles
 from repro.kernels.fed_reduce.ops import fed_reduce
 
 Params = Any  # pytree
@@ -93,6 +104,48 @@ def _fused_reduce_apply(global_params: Params, buf_leaves: tuple,
 _FUSED_REDUCE_APPLY = jax.jit(_fused_reduce_apply, static_argnames=("impl",))
 _FUSED_REDUCE_APPLY_DONATED = jax.jit(
     _fused_reduce_apply, static_argnames=("impl",), donate_argnums=(0,))
+
+
+def _partial_reduce(buf_leaves: tuple, wvec: jax.Array, *, impl: str) -> tuple:
+    # One chunk's streaming partial: the weighted row-sum of every leaf of
+    # one UpdateBuffer.  Dispatched the moment the chunk fully lands, so the
+    # reduction runs (async) while later chunks are still computing.
+    return tuple(fed_reduce(leaf, wvec, impl=impl) for leaf in buf_leaves)
+
+
+_PARTIAL_REDUCE = jax.jit(_partial_reduce, static_argnames=("impl",))
+
+
+def _apply_weighted_sum(global_params: Params, sum_leaves: tuple,
+                        inv_total: jax.Array, lr: jax.Array) -> Params:
+    # Trigger-time fold of the streaming partials: same server update the
+    # one-shot fused path applies, over pre-reduced weighted sums.
+    g_leaves, treedef = jax.tree.flatten(global_params)
+    out = [(g + lr * (s.reshape(g.shape) * inv_total - g)).astype(g.dtype)
+           for g, s in zip(g_leaves, sum_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+_APPLY_WEIGHTED_SUM = jax.jit(_apply_weighted_sum)
+_APPLY_WEIGHTED_SUM_DONATED = jax.jit(_apply_weighted_sum, donate_argnums=(0,))
+
+
+@dataclasses.dataclass
+class _StreamChunk:
+    """Accumulation state for one in-flight cohort chunk (one UpdateBuffer)."""
+
+    buffer: Any  # updates.UpdateBuffer
+    weights: np.ndarray  # per-row staleness-discounted weights (f32)
+    hits: np.ndarray  # per-row delivery counts (uniform-weight fallback)
+    clients: int = 0
+    filled: int = 0  # distinct rows seen — O(1) completion test
+
+    def alive(self) -> bool:
+        """False once the buffer's arrays were invalidated (e.g. donated by
+        ``HybridSimulation(recycle_buffers=True)`` into a later round)."""
+        return not any(
+            getattr(leaf, "is_deleted", lambda: False)()
+            for leaf in self.buffer.leaves2d)
 
 
 def handles_align(global_params: Params, payloads: list) -> bool:
@@ -196,6 +249,7 @@ class AggregationService:
         on_aggregate: Callable[[AggregationEvent], None] | None = None,
         reduce_impl: str = "auto",
         donate_params: bool = False,
+        streaming: bool = False,
     ):
         self.global_params = global_params
         self.trigger = trigger
@@ -209,19 +263,77 @@ class AggregationService:
         # when history params are read back (e.g. per-round eval curves).
         self.reduce_impl = reduce_impl
         self.donate_params = donate_params
+        # Streaming chunk aggregation (module docstring): aligned handle
+        # payloads accumulate per-buffer weight vectors; each chunk's
+        # fed_reduce partial fires as soon as its buffer is fully referenced.
+        # Non-handle payloads still take the pending-message path and are
+        # folded in at trigger time.
+        self.streaming = streaming
         self._pending: list[Message] = []
         self._pending_samples = 0
         self._pending_latency = 0.0
+        self._chunks: dict[int, _StreamChunk] = {}  # open, by id(buffer)
+        self._fired: list[_StreamChunk] = []  # kept for uniform fallback
+        self._partials: list[tuple[tuple, float]] = []  # (leaves, weight sum)
+        self._stream_clients = 0
+        self._g_sig = None  # cached (treedef, shapes) of global_params
         self.round_idx = 0
         self.history: list[AggregationEvent] = []
 
     # DeviceFlow delivery callback -----------------------------------------
     def __call__(self, d: Delivery) -> None:
-        self._pending.append(d.message)
-        self._pending_samples += d.message.num_samples
-        self._pending_latency += max(0.0, d.t - d.message.created_t)
+        m = d.message
+        self._pending_samples += m.num_samples
+        self._pending_latency += max(0.0, d.t - m.created_t)
+        if (self.streaming and isinstance(m.payload, UpdateHandle)
+                and self._stream_aligned(m.payload.buffer)):
+            self._stream_add(m)
+        else:
+            self._pending.append(m)
         if self.trigger.should_fire(self, d.t):
             self.aggregate(d.t)
+
+    # -- streaming accumulation --------------------------------------------
+    def _weight(self, m: Message) -> float:
+        w = float(m.num_samples)
+        if self.staleness_discount is not None:
+            w *= self.staleness_discount(max(0, self.round_idx - m.round_idx))
+        return w
+
+    def _stream_aligned(self, buffer) -> bool:
+        sig = self._g_sig
+        if sig is None:
+            leaves, treedef = jax.tree.flatten(self.global_params)
+            sig = self._g_sig = (treedef, [tuple(g.shape) for g in leaves])
+        return buffer.treedef == sig[0] and buffer.shapes == sig[1]
+
+    def _stream_add(self, m: Message) -> None:
+        h = m.payload
+        key = id(h.buffer)
+        ch = self._chunks.get(key)
+        if ch is None:
+            ch = self._chunks[key] = _StreamChunk(
+                h.buffer,
+                np.zeros(h.buffer.num_rows, np.float32),
+                np.zeros(h.buffer.num_rows, np.float32))
+        ch.weights[h.row] += self._weight(m)
+        if ch.hits[h.row] == 0.0:
+            ch.filled += 1
+        ch.hits[h.row] += 1.0
+        ch.clients += 1
+        self._stream_clients += 1
+        if ch.filled == ch.buffer.num_rows:
+            # The chunk has fully landed: fire its fed_reduce partial now —
+            # the (async) reduction overlaps the remaining chunks' compute.
+            self._fire_chunk(key)
+
+    def _fire_chunk(self, key: int) -> None:
+        ch = self._chunks.pop(key)
+        leaves = _PARTIAL_REDUCE(tuple(ch.buffer.leaves2d),
+                                 jnp.asarray(ch.weights),
+                                 impl=self.reduce_impl)
+        self._partials.append((leaves, float(ch.weights.sum())))
+        self._fired.append(ch)
 
     def tick(self, t: float) -> None:
         """Clock hook for scheduled triggers."""
@@ -229,52 +341,146 @@ class AggregationService:
             self.aggregate(t)
 
     def aggregate(self, t: float) -> AggregationEvent | None:
-        if not self._pending:
+        n_stream = self._stream_clients
+        if not self._pending and not n_stream:
             return None
-        updates, weights = [], []
-        for m in self._pending:
-            w = float(m.num_samples)
-            if self.staleness_discount is not None:
-                staleness = max(0, self.round_idx - m.round_idx)
-                w *= self.staleness_discount(staleness)
-            updates.append(m.payload)
-            weights.append(w)
-        if sum(weights) <= 0.0:
-            # An aggressive staleness_discount can zero every pending weight;
-            # fall back to uniform weights instead of crashing the delivery
-            # callback mid-flow.
-            weights = [1.0] * len(updates)
-        if handles_align(self.global_params, updates):
-            # Zero-copy path: one fused weighted reduction per stacked
-            # buffer, no host materialization.
-            self.global_params = _fused_fedavg_delta_validated(
-                self.global_params, updates, weights,
-                server_lr=self.server_lr, impl=self.reduce_impl,
-                donate=self.donate_params)
+        updates = [m.payload for m in self._pending]
+        weights = [self._weight(m) for m in self._pending]
+        if n_stream:
+            self.global_params = self._aggregate_streaming(updates, weights)
         else:
-            # Host reference path (serves host payloads; stray handles in a
-            # mixed batch are materialized rather than crashing mid-flow).
-            updates = [u.materialize() if isinstance(u, UpdateHandle) else u
-                       for u in updates]
-            self.global_params = fedavg_delta(
-                self.global_params, updates, weights,
-                server_lr=self.server_lr)
+            if sum(weights) <= 0.0:
+                # An aggressive staleness_discount can zero every pending
+                # weight; fall back to uniform weights instead of crashing
+                # the delivery callback mid-flow.
+                weights = [1.0] * len(updates)
+            if handles_align(self.global_params, updates):
+                # Zero-copy path: one fused weighted reduction per stacked
+                # buffer, no host materialization.
+                self.global_params = _fused_fedavg_delta_validated(
+                    self.global_params, updates, weights,
+                    server_lr=self.server_lr, impl=self.reduce_impl,
+                    donate=self.donate_params)
+            else:
+                # Host reference path (serves host payloads; stray handles in
+                # a mixed batch are materialized rather than crashing).
+                updates = [u.materialize() if isinstance(u, UpdateHandle)
+                           else u for u in updates]
+                self.global_params = fedavg_delta(
+                    self.global_params, updates, weights,
+                    server_lr=self.server_lr)
+        num_clients = len(self._pending) + n_stream
         ev = AggregationEvent(
             t=t,
             round_idx=self.round_idx,
-            num_clients=len(self._pending),
+            num_clients=num_clients,
             num_samples=self._pending_samples,
             global_params=self.global_params,
-            mean_latency_s=self._pending_latency / len(self._pending),
+            mean_latency_s=self._pending_latency / num_clients,
         )
         self.history.append(ev)
         self._pending = []
         self._pending_samples = 0
         self._pending_latency = 0.0
+        self._chunks = {}
+        self._fired = []
+        self._partials = []
+        self._stream_clients = 0
         self.round_idx += 1
         if self.on_aggregate is not None:
             self.on_aggregate(ev)
         return ev
+
+    def _aggregate_streaming(self, host_updates: list,
+                             host_weights: list[float]) -> Params:
+        """Fold fired partials + leftover chunks + host stragglers into the
+        server update (same math as ``fused_fedavg_delta``)."""
+        for key in list(self._chunks):  # chunks the dispatcher cut short
+            self._fire_chunk(key)
+        total = (sum(w for _, w in self._partials) + sum(host_weights))
+        if total <= 0.0:
+            # Uniform fallback: re-reduce every chunk with its delivery
+            # counts.  Needs the chunk buffers, which are retained until
+            # aggregation exactly for this case — but a retained buffer may
+            # have been invalidated meanwhile (``recycle_buffers`` donation)
+            # and a restored service has none at all (see ``state_dict``);
+            # the fallback covers whatever is still alive and keeps the
+            # params unchanged when nothing is, instead of crashing the
+            # delivery callback on dead device memory.
+            alive = [ch for ch in self._fired if ch.alive()]
+            if not alive and not host_updates:
+                return self.global_params
+            self._partials = [
+                (_PARTIAL_REDUCE(tuple(ch.buffer.leaves2d),
+                                 jnp.asarray(ch.hits), impl=self.reduce_impl),
+                 float(ch.hits.sum()))
+                for ch in alive]
+            host_weights = [1.0] * len(host_updates)
+            total = (sum(w for _, w in self._partials) + sum(host_weights))
+        summed = None
+        for leaves, _ in self._partials:
+            summed = (list(leaves) if summed is None
+                      else [a + b for a, b in zip(summed, leaves)])
+        if host_updates:
+            # Host-path stragglers (non-handle payloads): their f32 weighted
+            # sum joins the partials as one extra term.
+            host_updates = [u.materialize() if isinstance(u, UpdateHandle)
+                            else u for u in host_updates]
+            hs = None
+            for u, w in zip(host_updates, host_weights):
+                leaves = [np.asarray(l, np.float32).reshape(-1)
+                          * np.float32(w) for l in jax.tree.leaves(u)]
+                hs = (leaves if hs is None
+                      else [a + b for a, b in zip(hs, leaves)])
+            summed = (list(map(jnp.asarray, hs)) if summed is None
+                      else [a + jnp.asarray(b) for a, b in zip(summed, hs)])
+        apply = (_APPLY_WEIGHTED_SUM_DONATED if self.donate_params
+                 else _APPLY_WEIGHTED_SUM)
+        return apply(self.global_params, tuple(summed),
+                     jnp.float32(1.0 / total), jnp.float32(self.server_lr))
+
+    # -- checkpointing -------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Resume-safe aggregation state.
+
+        Open streaming chunks are flushed to partials first, and partial
+        sums are materialized to host arrays, so the result holds no live
+        device references.  (A restored service cannot apply the
+        uniform-weight fallback for pre-checkpoint partials — the chunk
+        buffers are gone; it keeps the params unchanged in that edge case.)
+        """
+        for key in list(self._chunks):
+            self._fire_chunk(key)
+
+        def enc_msg(m: Message) -> dict:
+            return {"task_id": m.task_id, "device_id": m.device_id,
+                    "round_idx": m.round_idx, "num_samples": m.num_samples,
+                    "created_t": m.created_t, "size_bytes": m.size_bytes,
+                    "payload": materialize_handles(m.payload)}
+
+        return {
+            "round_idx": self.round_idx,
+            "pending": [enc_msg(m) for m in self._pending],
+            "pending_samples": self._pending_samples,
+            "pending_latency": self._pending_latency,
+            "stream_clients": self._stream_clients,
+            "partials": [
+                {"leaves": [np.asarray(l) for l in leaves], "weight": w}
+                for leaves, w in self._partials],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.round_idx = int(d["round_idx"])
+        self._pending = [Message(**m) for m in d["pending"]]
+        self._pending_samples = int(d["pending_samples"])
+        self._pending_latency = float(d["pending_latency"])
+        self._stream_clients = int(d.get("stream_clients", 0))
+        self._partials = [
+            (tuple(jnp.asarray(l) for l in p["leaves"]), float(p["weight"]))
+            for p in d.get("partials", ())]
+        self._chunks = {}
+        self._fired = []
+        self._g_sig = None
 
     @property
     def pending_samples(self) -> int:
@@ -282,7 +488,7 @@ class AggregationService:
 
     @property
     def pending_clients(self) -> int:
-        return len(self._pending)
+        return len(self._pending) + self._stream_clients
 
 
 class Trigger:

@@ -1,21 +1,31 @@
-"""Task Manager + Resource Manager (paper §III.B).
+"""Task Manager + Resource Manager (paper §III.B) + event-driven engine.
 
 * ``ResourceManager`` — tracks the hybrid pool (logical bundles per grade and
   physical phones per grade), supports query/freeze/release and dynamic
-  scale-up/down.
+  scale-up/down; ``subscribe`` notifies listeners (the event engine) of pool
+  changes so allocations can be re-solved mid-task.
 * ``TaskScheduler`` — greedy: repeatedly admit the highest-benefit task whose
   demand fits the free pool (benefit = scheduling priority, ties broken by
   submission order).
-* ``TaskRunner`` — executes a scheduled task: solves the hybrid-allocation ILP
-  (``core.allocation``), splits devices across the tiers, and drives rounds.
+* ``TaskRunner`` — serial reference executor: solves the hybrid-allocation
+  ILP (``core.allocation``) and drives one task's rounds to completion.  With
+  a ``clock`` it also charges simulated time per round, which makes it the
+  *serial baseline* the ``multi_task_schedule`` benchmark gates against.
+* ``TaskEngine`` — the event-driven multi-task round engine (paper §IV.B's
+  time-shared resource pool): per-task round events interleave on a shared
+  ``VirtualClock`` instead of draining tasks back to back, queued tasks are
+  admitted at event boundaries, and a task's allocation is re-solved when
+  ``ResourceManager.scale`` changes the pool mid-task (elastic
+  re-allocation, vs the paper's static split).
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Callable
+from typing import Any, Callable, Iterable, Mapping
 
 from repro.core import allocation as alloc
+from repro.core.deviceflow import VirtualClock
 from repro.core.task import Task, TaskQueue
 
 
@@ -42,6 +52,7 @@ class ResourceManager:
         self._total = pool.copy()
         self._free = pool.copy()
         self._frozen: dict[int, dict[str, tuple[int, int]]] = {}
+        self._listeners: list[Callable[[], None]] = []
 
     # -- query ---------------------------------------------------------------
     def free(self) -> ResourcePool:
@@ -54,6 +65,11 @@ class ResourceManager:
             if self._free.physical_devices.get(grade, 0) < phones:
                 return False
         return True
+
+    def frozen(self, task_id: int) -> dict[str, tuple[int, int]] | None:
+        """The grant currently frozen for ``task_id`` (None if none)."""
+        got = self._frozen.get(task_id)
+        return dict(got) if got is not None else None
 
     # -- freeze / release -------------------------------------------------------
     def freeze(self, task_id: int, demand: dict[str, tuple[int, int]]) -> None:
@@ -80,7 +96,26 @@ class ResourceManager:
                 self._free.physical_devices.get(grade, 0) + phones
             )
 
+    def refreeze(self, task_id: int, demand: dict[str, tuple[int, int]]) -> None:
+        """Atomically replace a task's frozen grant (elastic re-allocation).
+
+        Rolls back to the old grant if the new one does not fit.
+        """
+        old = self._frozen.get(task_id)
+        if old is None:
+            raise KeyError(f"task {task_id} holds no frozen resources")
+        self.release(task_id)
+        try:
+            self.freeze(task_id, demand)
+        except ValueError:
+            self.freeze(task_id, old)
+            raise
+
     # -- elastic scaling (paper: "dynamic scaling up or down") ------------------
+    def subscribe(self, fn: Callable[[], None]) -> None:
+        """Register a pool-change listener (fired after every ``scale``)."""
+        self._listeners.append(fn)
+
     def scale(self, grade: str, *, bundles_delta: int = 0, phones_delta: int = 0) -> None:
         """Add/remove capacity.  Removal never takes frozen resources."""
         for field, delta in (
@@ -96,6 +131,8 @@ class ResourceManager:
                 )
             free[grade] = free.get(grade, 0) + delta
             total[grade] = total.get(grade, 0) + delta
+        for fn in self._listeners:
+            fn()
 
 
 @dataclasses.dataclass
@@ -123,8 +160,28 @@ class TaskScheduler:
         return admitted
 
 
+def _normalize_runtimes(runtimes) -> Callable[[Task], list[alloc.GradeRuntime]]:
+    return runtimes.for_task if hasattr(runtimes, "for_task") else runtimes
+
+
+def _run_tiers(tier_runners: Mapping[str, Callable[..., Any]], task: Task,
+               allocation: alloc.AllocationResult, round_idx: int) -> None:
+    """Execute one round's per-grade split through the tier callables."""
+    for ga in allocation.per_grade:
+        if ga.logical_devices:
+            tier_runners["logical"](task, ga.grade, ga.logical_devices, round_idx)
+        if ga.physical_devices:
+            tier_runners["device"](task, ga.grade, ga.physical_devices, round_idx)
+
+
+# RoundRunner contract: (task, round_idx, allocation, t) -> measured round
+# duration in virtual seconds, or None to fall back to allocation.makespan.
+RoundRunner = Callable[[Task, int, alloc.AllocationResult, float],
+                       "float | None"]
+
+
 class TaskRunner:
-    """Executes admitted tasks against the hybrid tiers.
+    """Serial reference executor for admitted tasks.
 
     ``runtimes`` supplies the per-grade ``GradeRuntime``s the allocator runs
     on: either a callable ``task -> list[GradeRuntime]`` or any object with a
@@ -132,24 +189,36 @@ class TaskRunner:
     scheduler allocates on *measured* fleet durations instead of hand-coded
     constants.
 
-    ``tier_runners`` maps tier name ("logical"/"device") to a callable
-    ``run(task, grade, num_devices, round_idx) -> list[result]``; the runner
-    stays agnostic of what the tiers compute (operator flows are resolved by
-    the tiers themselves).
+    Round execution is either ``tier_runners`` (a map of tier name
+    ("logical"/"device") to ``run(task, grade, num_devices, round_idx)``) or
+    a ``round_runner`` callable ``(task, round_idx, allocation, t) ->
+    duration_s | None`` shared with ``TaskEngine`` — so the serial baseline
+    and the event engine execute rounds through identical code.
+
+    With a ``clock``, each round advances the shared ``VirtualClock`` by the
+    round's (measured or estimated) duration, so a serial drain reports a
+    *simulated makespan* directly comparable to the event engine's.  This is
+    deliberately the run-to-completion baseline: one task drains fully
+    before the next starts.
     """
 
     def __init__(
         self,
         resources: ResourceManager,
         runtimes: Callable[[Task], list[alloc.GradeRuntime]],
-        tier_runners: dict[str, Callable[..., list[Any]]],
+        tier_runners: dict[str, Callable[..., list[Any]]] | None = None,
         *,
+        round_runner: RoundRunner | None = None,
+        clock: VirtualClock | None = None,
         on_round_complete: Callable[[Task, int], None] | None = None,
     ):
+        if tier_runners is None and round_runner is None:
+            raise ValueError("pass tier_runners or round_runner")
         self.resources = resources
-        self.runtimes = (runtimes.for_task
-                         if hasattr(runtimes, "for_task") else runtimes)
+        self.runtimes = _normalize_runtimes(runtimes)
         self.tier_runners = tier_runners
+        self.round_runner = round_runner
+        self.clock = clock
         self.on_round_complete = on_round_complete
         self.records: dict[int, ScheduledTask] = {}
 
@@ -160,17 +229,17 @@ class TaskRunner:
         self.records[task.task_id] = rec
         try:
             for round_idx in range(task.rounds):
-                for ga in result.per_grade:
-                    if ga.logical_devices:
-                        self.tier_runners["logical"](
-                            task, ga.grade, ga.logical_devices, round_idx
-                        )
-                    if ga.physical_devices:
-                        self.tier_runners["device"](
-                            task, ga.grade, ga.physical_devices, round_idx
-                        )
+                duration = None
+                if self.round_runner is not None:
+                    t = self.clock.now if self.clock is not None else 0.0
+                    duration = self.round_runner(task, round_idx, result, t)
+                else:
+                    _run_tiers(self.tier_runners, task, result, round_idx)
                 if self.on_round_complete is not None:
                     self.on_round_complete(task, round_idx)
+                if self.clock is not None:
+                    self.clock.advance(
+                        duration if duration is not None else result.makespan)
             rec.state = TaskState.COMPLETED
         except Exception:
             rec.state = TaskState.FAILED
@@ -180,8 +249,359 @@ class TaskRunner:
         return rec
 
 
+# --------------------------------------------------------------------------- #
+# Event-driven multi-task engine
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class TaskExecution:
+    """Live state of one admitted task inside ``TaskEngine``."""
+
+    task: Task
+    grant: dict[str, tuple[int, int]]  # resources currently frozen for it
+    allocation: alloc.AllocationResult
+    state: TaskState = TaskState.RUNNING
+    rounds_done: int = 0
+    started_t: float = 0.0
+    next_event_t: float | None = None
+    finished_t: float | None = None
+    reallocations: int = 0  # elastic grant upgrades applied mid-task
+    generation: int = 0  # invalidates stale scheduled events
+
+    @property
+    def full_grant(self) -> bool:
+        return self.grant == self.task.demand()
+
+
+class StrandedTasksError(RuntimeError):
+    """Raised by ``TaskManager.drain(strict=True)`` when tasks are left in
+    the queue (nothing fits, or ``max_cycles`` ran out)."""
+
+    def __init__(self, stranded: list[Task], reason: str):
+        self.stranded = stranded
+        self.reason = reason
+        super().__init__(
+            f"{len(stranded)} task(s) stranded in queue ({reason}): "
+            f"{[t.task_id for t in stranded]}")
+
+
+class DrainResult(list):
+    """``TaskManager.drain`` result: the completed ``ScheduledTask``s (list
+    behavior preserved) plus explicit stranded-task reporting — a drain that
+    leaves work in the queue is no longer indistinguishable from success."""
+
+    def __init__(self, done: Iterable = (), stranded: Iterable[Task] = (),
+                 reason: str | None = None):
+        super().__init__(done)
+        self.stranded: list[Task] = list(stranded)
+        self.stranded_reason = reason if self.stranded else None
+
+
+class TaskEngine:
+    """Event-driven multi-task round engine on a shared ``VirtualClock``.
+
+    Instead of draining each admitted task to completion (``TaskRunner``),
+    every admitted task schedules its next *round event* on the clock; rounds
+    of different tasks interleave in virtual-time order, so several tasks'
+    ``RoundPlan``s time-share the same resource pool — the contention regime
+    run-to-completion scheduling structurally cannot express.
+
+    * **Admission at event boundaries** — whenever a task completes (or the
+      pool changes), queued tasks are re-checked in priority order and
+      admitted if a feasible grant exists.
+    * **Elastic grants** — with ``elastic=True`` a task whose full demand
+      does not fit may be admitted with its demand *clamped to the free
+      pool* (any grant whose effective allocation is solvable); when
+      resources free up — a task finishing, or ``ResourceManager.scale``
+      growing the pool — running tasks top their grants back up toward the
+      full request and their allocation is re-solved for the remaining
+      rounds (``TaskExecution.reallocations`` counts the upgrades).
+    * **Measured durations drive event timestamps** — round execution goes
+      through the same ``round_runner``/``tier_runners`` contracts as
+      ``TaskRunner``; a ``round_runner`` returning a measured duration (e.g.
+      ``FederatedRoundOutcome.makespan_s``) times the next event, otherwise
+      the allocation's estimated makespan does.  With both executors omitted
+      the engine runs a pure virtual-time schedule (useful for scheduling
+      studies and tests).  Passing a ``RuntimeCalibrator`` as ``runtimes``
+      plus a ``duration_rng`` draws *sampled* observed runtimes per round,
+      so event timestamps carry measured round-to-round jitter.
+
+    Share the clock with a ``DeviceFlow`` (``clock=flow.clock``) and round
+    events interleave with dispatch/delivery events on one timeline.
+    """
+
+    def __init__(
+        self,
+        resources: ResourceManager,
+        runtimes: Callable[[Task], list[alloc.GradeRuntime]],
+        tier_runners: dict[str, Callable[..., list[Any]]] | None = None,
+        *,
+        round_runner: RoundRunner | None = None,
+        clock: VirtualClock | None = None,
+        elastic: bool = True,
+        duration_rng=None,
+        on_round_complete: Callable[[Task, int], None] | None = None,
+        on_task_complete: Callable[[TaskExecution], None] | None = None,
+    ):
+        self.resources = resources
+        self.runtimes = _normalize_runtimes(runtimes)
+        self._calibrator = (runtimes if hasattr(runtimes, "sample_for_task")
+                            else None)
+        self.duration_rng = duration_rng
+        self.tier_runners = tier_runners
+        self.round_runner = round_runner
+        self.clock = clock or VirtualClock()
+        self.elastic = elastic
+        self.on_round_complete = on_round_complete
+        self.on_task_complete = on_task_complete
+        self.queue = TaskQueue()
+        self.executions: dict[int, TaskExecution] = {}
+        self.completed: list[TaskExecution] = []
+        resources.subscribe(self._on_pool_change)
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, task: Task) -> int:
+        tid = self.queue.submit(task)
+        self.clock.schedule(self.clock.now, self._admit)
+        return tid
+
+    # -- allocation ---------------------------------------------------------
+    def _round_runtimes(self, task: Task) -> list[alloc.GradeRuntime]:
+        if self._calibrator is not None and self.duration_rng is not None:
+            return self._calibrator.sample_for_task(task, self.duration_rng)
+        return self.runtimes(task)
+
+    def _solve(self, task: Task,
+               grant: Mapping[str, tuple[int, int]]) -> alloc.AllocationResult:
+        return alloc.solve_allocation(
+            list(task.effective_grades(grant)), self._round_runtimes(task))
+
+    def _grant_for(self, task: Task) -> dict[str, tuple[int, int]] | None:
+        demand = task.demand()
+        if self.resources.fits(demand):
+            return demand
+        if not self.elastic:
+            return None
+        free = self.resources.free()
+        clamped = {
+            g: (min(b, free.logical_bundles.get(g, 0)),
+                min(p, free.physical_devices.get(g, 0)))
+            for g, (b, p) in demand.items()
+        }
+        if not any(b or p for b, p in clamped.values()):
+            return None
+        return clamped
+
+    # -- event handlers ------------------------------------------------------
+    def _admit(self) -> None:
+        """Admit every queued task (priority order) with a feasible grant."""
+        for task in list(self.queue.pending()):
+            grant = self._grant_for(task)
+            if grant is None:
+                continue
+            try:
+                allocation = self._solve(task, grant)
+            except ValueError:  # grant infeasible (a grade got no resources)
+                continue
+            self.resources.freeze(task.task_id, grant)
+            self.queue.remove(task.task_id)
+            ex = TaskExecution(task=task, grant=grant, allocation=allocation,
+                               started_t=self.clock.now)
+            self.executions[task.task_id] = ex
+            self._schedule(ex, self.clock.now, self._round_event)
+
+    def _rebalance(self) -> None:
+        """Top running tasks' grants back up toward their full demand and
+        re-solve their allocations (elastic re-allocation).  The in-flight
+        round keeps its already-scheduled completion time; the new split
+        applies from the next round."""
+        if not self.elastic:
+            return
+        running = sorted(
+            (ex for ex in self.executions.values()
+             if ex.state is TaskState.RUNNING and not ex.full_grant),
+            key=lambda ex: (-ex.task.priority, ex.task.task_id))
+        for ex in running:
+            free = self.resources.free()
+            demand = ex.task.demand()
+            upgraded = {
+                g: (min(rb, ex.grant[g][0] + free.logical_bundles.get(g, 0)),
+                    min(rp, ex.grant[g][1] + free.physical_devices.get(g, 0)))
+                for g, (rb, rp) in demand.items()
+            }
+            if upgraded == ex.grant:
+                continue
+            try:
+                allocation = self._solve(ex.task, upgraded)
+            except ValueError:
+                continue
+            self.resources.refreeze(ex.task.task_id, upgraded)
+            ex.grant = upgraded
+            ex.allocation = allocation
+            ex.reallocations += 1
+
+    def _on_pool_change(self) -> None:
+        # Deferred to an event so mid-round scale() calls take effect at the
+        # next event boundary, like every other engine state change.
+        self.clock.schedule(self.clock.now, self._pool_change_event)
+
+    def _pool_change_event(self) -> None:
+        self._rebalance()
+        self._admit()
+
+    def _schedule(self, ex: TaskExecution, t: float, handler) -> None:
+        ex.generation += 1
+        gen = ex.generation
+        ex.next_event_t = t
+        tid = ex.task.task_id
+        self.clock.schedule(t, lambda: handler(tid, gen))
+
+    def _round_event(self, tid: int, gen: int) -> None:
+        ex = self.executions.get(tid)
+        if ex is None or ex.generation != gen or ex.state is not TaskState.RUNNING:
+            return  # stale event (task rescheduled/failed meanwhile)
+        round_idx = ex.rounds_done
+        t = self.clock.now
+        duration = None
+        try:
+            if self.round_runner is not None:
+                duration = self.round_runner(ex.task, round_idx, ex.allocation, t)
+            elif self.tier_runners is not None:
+                _run_tiers(self.tier_runners, ex.task, ex.allocation, round_idx)
+        except Exception:
+            ex.state = TaskState.FAILED
+            ex.next_event_t = None
+            self.resources.release(tid)
+            raise
+        if duration is None:
+            duration = ex.allocation.makespan
+        ex.rounds_done += 1
+        if self.on_round_complete is not None:
+            self.on_round_complete(ex.task, round_idx)
+        if ex.rounds_done >= ex.task.rounds:
+            # The task occupies its resources until the last round's slowest
+            # device reports — release at t + duration, not at dispatch.
+            self._schedule(ex, t + duration, self._completion_event)
+        else:
+            self._schedule(ex, t + duration, self._round_event)
+
+    def _completion_event(self, tid: int, gen: int) -> None:
+        ex = self.executions.get(tid)
+        if ex is None or ex.generation != gen or ex.state is not TaskState.RUNNING:
+            return
+        ex.state = TaskState.COMPLETED
+        ex.finished_t = self.clock.now
+        ex.next_event_t = None
+        self.resources.release(tid)
+        self.completed.append(ex)
+        if self.on_task_complete is not None:
+            self.on_task_complete(ex)
+        # Event boundary: freed resources may fit queued tasks or top up
+        # running elastic grants.
+        self._rebalance()
+        self._admit()
+
+    # -- driving -------------------------------------------------------------
+    def run_until(self, t_end: float = float("inf")) -> list[TaskExecution]:
+        """Drive the clock; returns tasks completed so far."""
+        self.clock.run_until(t_end)
+        return self.completed
+
+    def drain(self) -> DrainResult:
+        """Run until the event heap empties; reports stranded tasks."""
+        self.run_until()
+        stranded = list(self.queue.pending())
+        return DrainResult(self.completed, stranded,
+                           "nothing-fits" if stranded else None)
+
+    @property
+    def makespan(self) -> float:
+        """Virtual time of the latest task completion so far."""
+        return max((ex.finished_t for ex in self.completed
+                    if ex.finished_t is not None), default=0.0)
+
+    # -- checkpointing --------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Resume-safe engine state (JSON-friendly; no Task objects).
+
+        Captures the queue order, every live execution's grant/progress and
+        its next scheduled event time, and the clock.  Tasks themselves are
+        *not* serialized — like ``DeviceFlow.load_state_dict`` after
+        ``register_task``, the caller re-supplies the ``Task`` objects on
+        restore.
+        """
+        def enc(ex: TaskExecution) -> dict:
+            return {
+                "task_id": ex.task.task_id,
+                "grant": {g: list(bp) for g, bp in ex.grant.items()},
+                "state": ex.state.value,
+                "rounds_done": ex.rounds_done,
+                "started_t": ex.started_t,
+                "next_event_t": ex.next_event_t,
+                "finished_t": ex.finished_t,
+                "reallocations": ex.reallocations,
+            }
+
+        return {
+            "now": self.clock.now,
+            "queue": [t.task_id for t in self.queue.pending()],
+            "executions": [enc(ex) for ex in self.executions.values()],
+        }
+
+    def load_state_dict(self, state: Mapping,
+                        tasks: Iterable[Task]) -> None:
+        """Rebuild engine state from ``state_dict`` output.
+
+        ``tasks`` supplies the Task objects referenced by the saved state
+        (any iterable; matched by ``task_id``).  Requires a fresh engine on
+        a fresh ``ResourceManager`` (grants are re-frozen here).  Pending
+        round events are rescheduled at their saved timestamps, so a
+        restored run continues on the exact same virtual timeline —
+        *provided the runtimes provider is restored too*: allocations are
+        re-solved here, so a ``RuntimeCalibrator`` must have its
+        observations reloaded first (``RuntimeCalibrator.load_state_dict``)
+        and a ``duration_rng`` engine's sampled event times are not
+        reproducible across a restore (the generator state is not saved).
+        """
+        by_id = {t.task_id: t for t in tasks}
+        self.clock.now = float(state["now"])
+        for tid in state["queue"]:
+            self.queue.submit(by_id[int(tid)])
+        for enc in state["executions"]:
+            tid = int(enc["task_id"])
+            task = by_id[tid]
+            grant = {g: (int(bp[0]), int(bp[1]))
+                     for g, bp in enc["grant"].items()}
+            ex = TaskExecution(
+                task=task, grant=grant,
+                allocation=self._solve(task, grant),
+                state=TaskState(enc["state"]),
+                rounds_done=int(enc["rounds_done"]),
+                started_t=float(enc["started_t"]),
+                finished_t=(None if enc["finished_t"] is None
+                            else float(enc["finished_t"])),
+                reallocations=int(enc["reallocations"]),
+            )
+            self.executions[tid] = ex
+            if ex.state is TaskState.RUNNING:
+                self.resources.freeze(tid, grant)
+                if enc["next_event_t"] is not None:
+                    t = float(enc["next_event_t"])
+                    handler = (self._completion_event
+                               if ex.rounds_done >= task.rounds
+                               else self._round_event)
+                    self._schedule(ex, t, handler)
+            elif ex.state is TaskState.COMPLETED:
+                self.completed.append(ex)
+        self.clock.schedule(self.clock.now, self._admit)
+
+
 class TaskManager:
-    """Facade: queue + scheduler + runner (paper's *Task Manager* service)."""
+    """Facade: queue + scheduler + runner (paper's *Task Manager* service).
+
+    ``drain`` is the serial run-to-completion path — kept as the measured
+    baseline; use a ``TaskEngine`` on a shared clock for event-driven
+    multi-task rounds.
+    """
 
     def __init__(self, resources: ResourceManager, runner: TaskRunner):
         self.queue = TaskQueue()
@@ -198,13 +618,29 @@ class TaskManager:
             done.append(self.runner.run(task))
         return done
 
-    def drain(self, max_cycles: int = 1000) -> list[ScheduledTask]:
-        out = []
+    def drain(self, max_cycles: int = 1000, *, strict: bool = False
+              ) -> DrainResult:
+        """Run scheduling cycles until the queue empties.
+
+        Previously a non-empty queue at exit (nothing fits, or
+        ``max_cycles`` exhausted) looked identical to success; the result
+        now reports ``stranded`` tasks and ``stranded_reason`` explicitly,
+        and ``strict=True`` raises ``StrandedTasksError`` instead.
+        """
+        done: list[ScheduledTask] = []
+        reason = None
         for _ in range(max_cycles):
             if not len(self.queue):
                 break
             got = self.step()
             if not got:  # nothing fits — resources exhausted for now
+                reason = "nothing-fits"
                 break
-            out.extend(got)
+            done.extend(got)
+        else:
+            if len(self.queue):
+                reason = "max-cycles-exhausted"
+        out = DrainResult(done, self.queue.pending(), reason)
+        if strict and out.stranded:
+            raise StrandedTasksError(out.stranded, reason or "unknown")
         return out

@@ -473,6 +473,16 @@ class HybridSimulation:
     ``Checkpointer`` itself.  ``zero_copy=False`` keeps the PR 2
     host-materializing path as the correctness/perf reference.
 
+    ``stream_chunks=True`` submits each cohort chunk's messages through
+    DeviceFlow *as the chunk dispatches* instead of once at round end — the
+    feed for streaming aggregation (``AggregationService(streaming=True)``):
+    chunk k's ``fed_reduce`` partial fires while chunk k+1 still computes.
+    Trade-off: streamed messages are stamped at the clock's current time, so
+    per-message arrival-time fidelity (fleet-sampled queuing delay) is
+    traded for pipeline overlap; round makespans and ``round_complete``
+    timing still come from the fleet sample.  Benchmarking (q_i) rows are
+    held back until their handles materialize and submitted last.
+
     ``recycle_buffers=True`` additionally donates round k's update buffers
     into round k+1's cohort dispatches: XLA writes the new updates in place
     of the retired ones, so steady-state rounds allocate no buffer-sized
@@ -492,9 +502,11 @@ class HybridSimulation:
         tiers: Mapping[str, DeviceTier] | None = None,
         zero_copy: bool = True,
         recycle_buffers: bool = False,
+        stream_chunks: bool = False,
     ):
         self.zero_copy = zero_copy
         self.recycle_buffers = recycle_buffers
+        self.stream_chunks = stream_chunks
         self._retired: dict = {}  # (tier id, rows) -> [UpdateBuffer]
         self._staged: dict = {}
         self.logical = logical
@@ -583,6 +595,19 @@ class HybridSimulation:
                     )
                 )
 
+        stream = self.stream_chunks and self.deviceflow is not None
+        mat_set = set(materialize_rows)
+
+        def stream_chunk(n_before: int) -> None:
+            # Streaming feed: this chunk's messages enter DeviceFlow now, so
+            # a streaming aggregation service fires the chunk's fed_reduce
+            # partial while the next chunk's cohort is still computing.  The
+            # q_i benchmarking rows are held back until materialization.
+            fresh = [m for i, m in enumerate(msgs[n_before:], start=n_before)
+                     if i not in mat_set]
+            if fresh:
+                self.deviceflow.submit_many(fresh)
+
         def run_chunk(sim_tier, lo, hi, sub):
             # Same per-device rng derivation in both modes (run_cohort splits
             # the chunk key identically), so zero_copy is numerics-preserving.
@@ -617,7 +642,10 @@ class HybridSimulation:
         while idx < num_logical:
             hi = min(idx + self.logical.cohort_size, num_logical)
             rng, sub = jax.random.split(rng)
+            n_before = len(msgs)
             run_chunk(self.logical, idx, hi, sub)
+            if stream:
+                stream_chunk(n_before)
             idx = hi
 
         # Device tier: vectorized cohorts through the bf16 backend — one
@@ -626,7 +654,10 @@ class HybridSimulation:
         while idx < n_total:
             hi = min(idx + tier.cohort_size, n_total)
             rng, sub = jax.random.split(rng)
+            n_before = len(msgs)
             run_chunk(tier, idx, hi, sub)
+            if stream:
+                stream_chunk(n_before)
             idx = hi
 
         # Deferred host materialization: only the q_i benchmarking devices'
@@ -636,6 +667,8 @@ class HybridSimulation:
             if isinstance(m.payload, UpdateHandle):
                 msgs[r] = dataclasses.replace(
                     m, payload=m.payload.materialize())
+        if stream and mat_set:
+            self.deviceflow.submit_many([msgs[r] for r in sorted(mat_set)])
         return msgs, rng
 
     # -- grade-partitioned rounds (allocator-driven) -----------------------
@@ -737,7 +770,8 @@ class HybridSimulation:
 
         arrival_times = (np.concatenate(arrivals) if arrivals else None)
         if self.deviceflow is not None and msgs:
-            self.deviceflow.submit_many(msgs, ts=arrival_times)
+            if not self.stream_chunks:  # streamed rounds already submitted
+                self.deviceflow.submit_many(msgs, ts=arrival_times)
             # The round ends when the slowest device reports, not at clock.now.
             self.deviceflow.round_complete(
                 task_id, t=float(np.max(arrival_times)))
@@ -812,7 +846,8 @@ class HybridSimulation:
             )
 
         if self.deviceflow is not None:
-            self.deviceflow.submit_many(msgs, ts=arrival_times)
+            if not self.stream_chunks:  # streamed rounds already submitted
+                self.deviceflow.submit_many(msgs, ts=arrival_times)
             # The round ends when the slowest device reports, not at clock.now.
             t_end = (float(np.max(arrival_times))
                      if arrival_times is not None and len(arrival_times)

@@ -84,6 +84,16 @@ class GradeSpec:
         (the q_i benchmarking devices are reserved for measurement)."""
         return self.num_devices - self.benchmarking_devices
 
+    def with_resources(self, logical_bundles: int,
+                       physical_devices: int) -> "GradeSpec":
+        """This grade under an elastic resource grant: same devices to
+        simulate, granted (instead of requested) tier resources.  The event
+        engine re-solves allocations against these effective specs whenever
+        a task's grant changes mid-run."""
+        return dataclasses.replace(
+            self, logical_bundles=logical_bundles,
+            physical_devices=physical_devices)
+
 
 @dataclasses.dataclass
 class Task:
@@ -115,6 +125,23 @@ class Task:
     def demand(self) -> dict[str, tuple[int, int]]:
         """Resource demand per grade: (logical bundles, physical devices)."""
         return {g.grade: (g.logical_bundles, g.physical_devices) for g in self.grades}
+
+    def effective_grades(
+        self, grant: Mapping[str, tuple[int, int]]
+    ) -> tuple[GradeSpec, ...]:
+        """Grade specs under a (possibly clamped) resource grant.
+
+        Grades absent from ``grant`` keep their requested resources.  This is
+        how the event engine expresses elastic allocation: a task admitted
+        with less than its full demand is solved against the resources it
+        actually holds, and re-solved when the grant changes.
+        """
+        out = []
+        for g in self.grades:
+            bundles, phones = grant.get(
+                g.grade, (g.logical_bundles, g.physical_devices))
+            out.append(g.with_resources(bundles, phones))
+        return tuple(out)
 
 
 class TaskQueue:

@@ -5,6 +5,14 @@ batched prefill+decode loop — the paper's "fluctuating access load" concern
 Requests arrive on a user-defined traffic curve; a batcher drains the queue
 into fixed-size decode batches; per-tick throughput/queue-depth metrics come
 back — exactly the information a cloud autoscaler would consume.
+
+Handle-style payload accounting (round-engine parity): request tokens are
+stacked into one device-resident ``UpdateBuffer`` and every message carries
+an ``UpdateHandle`` row whose ``nbytes`` is the prompt's real wire size — so
+DeviceFlow byte accounting (``Shelf.total_bytes_*``) covers serving traffic
+exactly like training updates, and same-buffer batches gather their prompt
+rows on device instead of re-stacking host lists.  Plain host-dict payloads
+(``{"tokens": ndarray}``) remain supported.
 """
 from __future__ import annotations
 
@@ -19,7 +27,15 @@ from repro.configs.registry import get_config
 from repro.core.deviceflow import Delivery, DeviceFlow, Message
 from repro.core.strategies import TimeIntervalStrategy
 from repro.core.traffic_curves import right_tailed_normal
+from repro.core.updates import UpdateBuffer, UpdateHandle
 from repro.models.registry import get_model
+
+
+def stack_requests(token_rows: np.ndarray) -> UpdateBuffer:
+    """Stack request prompts ``(n, prompt_len)`` into one device-resident
+    token buffer; ``buf.handle(i)`` is request ``i``'s message payload."""
+    return UpdateBuffer.from_stacked(
+        {"tokens": jnp.asarray(np.asarray(token_rows, np.int32))})
 
 
 @dataclasses.dataclass
@@ -55,12 +71,26 @@ class BatchedServer:
         while len(self.queue) >= self.batch_size:
             self._serve_batch(d.t)
 
+    def _gather_prompts(self, batch: list[Message]) -> jnp.ndarray:
+        """(batch, prompt_len) int32 prompt tokens from message payloads.
+
+        Same-buffer handle payloads take the device gather fast path (no
+        host round-trip); anything else stacks on host as before.
+        """
+        if (all(isinstance(m.payload, UpdateHandle) for m in batch)
+                and len({id(m.payload.buffer) for m in batch}) == 1):
+            leaf = batch[0].payload.buffer.leaves2d[0]  # (rows, prompt_len)
+            rows = jnp.asarray([m.payload.row for m in batch])
+            return jnp.take(leaf, rows, axis=0)[:, : self.prompt_len]
+        tokens = [(m.payload.materialize()["tokens"]
+                   if isinstance(m.payload, UpdateHandle) else
+                   m.payload["tokens"]) for m in batch]
+        return jnp.stack(
+            [jnp.asarray(tk[: self.prompt_len]) for tk in tokens])
+
     def _serve_batch(self, t: float) -> None:
         batch = [self.queue.pop(0) for _ in range(self.batch_size)]
-        prompts = jnp.stack([
-            jnp.asarray(m.payload["tokens"][: self.prompt_len])
-            for m in batch
-        ])
+        prompts = self._gather_prompts(batch)
         logits, caches = self._prefill(self.params, prompts)
         tok = jnp.argmax(logits[:, : self.cfg.vocab_size], axis=-1).astype(jnp.int32)
         n = 0
@@ -102,19 +132,25 @@ def main(argv=None):
         curve=right_tailed_normal(args.sigma), interval=args.interval))
 
     rng = np.random.default_rng(args.seed)
+    # Handle payloads: one device-resident token buffer, one row per request
+    # — Message.size_bytes is the prompt's real wire size, so the shelf's
+    # byte counters below report actual serving traffic.
+    buf = stack_requests(rng.integers(
+        1, cfg.vocab_size, size=(args.requests, args.prompt_len)))
     for i in range(args.requests):
         flow.submit(Message(
-            task_id=0, device_id=i, round_idx=0,
-            payload={"tokens": rng.integers(
-                1, cfg.vocab_size, size=args.prompt_len).astype(np.int32)},
-        ))
+            task_id=0, device_id=i, round_idx=0, payload=buf.handle(i)))
     flow.round_complete(0)
     flow.run()
     server.drain(flow.clock.now)
 
     total = sum(m.tokens_decoded for m in server.metrics)
+    shelf = flow.shelf(0)
     print(f"served {len(server.metrics)} batches, {total} tokens; "
-          f"peak queue {max((m.queue_depth for m in server.metrics), default=0)}")
+          f"peak queue {max((m.queue_depth for m in server.metrics), default=0)}; "
+          f"request traffic {shelf.total_bytes_dispatched / 1024:.1f} KiB "
+          f"({shelf.total_bytes_dispatched // max(shelf.total_dispatched, 1)} "
+          f"B/request)")
     for m in server.metrics[:10]:
         print(f"  t={m.t:7.2f}s queue={m.queue_depth:3d} "
               f"decoded={m.tokens_decoded}")

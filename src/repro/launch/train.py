@@ -33,9 +33,11 @@ from repro.core.deviceflow import DeviceFlow
 from repro.core.devicemodel import GRADES
 from repro.core.federation import (
     AggregationService,
+    ClientCountTrigger,
     SampleThresholdTrigger,
     ScheduledTrigger,
 )
+from repro.core.scheduler import ResourceManager, ResourcePool, TaskEngine
 from repro.core.simulation import (
     DeviceTier,
     HybridSimulation,
@@ -43,7 +45,7 @@ from repro.core.simulation import (
     RoundPlan,
 )
 from repro.core.strategies import AccumulatedStrategy, TimeIntervalStrategy
-from repro.core.task import GradeSpec
+from repro.core.task import GradeSpec, OperatorFlow, Task
 from repro.core.traffic_curves import right_tailed_normal
 from repro.core.updates import UpdateHandle
 from repro.data.tokens import TokenPipeline
@@ -232,6 +234,111 @@ def federated_training(args) -> dict:
     return {"losses": losses, "aggregations": len(svc.history)}
 
 
+class _TaskRouter:
+    """DeviceFlow deliver callback fanning out to per-task services."""
+
+    def __init__(self):
+        self.services: dict[int, AggregationService] = {}
+
+    def __call__(self, d):
+        self.services[d.message.task_id](d)
+
+
+def multi_task_federated(args) -> dict:
+    """``--tasks N``: event-driven multi-task rounds on one shared pool.
+
+    N federated CTR-style LM tasks contend for a resource pool sized to fit
+    roughly half of them at full demand; the ``TaskEngine`` interleaves
+    their rounds on the shared ``VirtualClock`` (elastic grants let tasks
+    run on a partial share and top back up as others finish), each round
+    executes through ``HybridSimulation.run_plan_round`` with chunk
+    streaming, and every task aggregates through its own *streaming*
+    ``AggregationService``.  Reports per-task completion times plus the
+    interleaved makespan vs the serial (back-to-back) estimate.
+    """
+    cfg = get_config(args.arch, smoke=True)
+    api = get_model(cfg)
+    rng = np.random.default_rng(args.seed)
+    seq = 64
+    n_clients = args.clients_per_round
+
+    def local_train(params, batch, _rng):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, batch, cfg)[0])(params)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - args.client_lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, loss
+
+    spec = GradeSpec("High", n_clients, logical_bundles=max(1, n_clients // 2),
+                     bundles_per_device=1,
+                     physical_devices=max(1, n_clients // 4))
+    tasks = [Task(OperatorFlow(("train",)), (spec,), rounds=args.rounds,
+                  priority=args.tasks - i) for i in range(args.tasks)]
+    # Pool fits about half the fleet at full demand (plus a spare bundle for
+    # elastic partial grants): later tasks run on what is free and rebalance
+    # up as earlier ones finish.
+    fit = max(1, -(-args.tasks // 2))
+    rm = ResourceManager(ResourcePool(
+        {"High": spec.logical_bundles * fit + 1},
+        {"High": spec.physical_devices * fit}))
+
+    router = _TaskRouter()
+    flow = DeviceFlow(router, seed=args.seed)
+    for task in tasks:
+        router.services[task.task_id] = AggregationService(
+            api.init(jax.random.PRNGKey(args.seed + task.task_id), cfg),
+            trigger=ClientCountTrigger(n_clients), streaming=True)
+        flow.register_task(task.task_id, AccumulatedStrategy(
+            thresholds=(1,), failure_prob=args.dropout))
+
+    sim = HybridSimulation(
+        LogicalTier(local_train, cohort_size=max(2, n_clients // 2)),
+        tiers={"High": DeviceTier(local_train, GRADES["High"],
+                                  seed=args.seed)},
+        deviceflow=flow, stream_chunks=True)
+    cal = RuntimeCalibrator()
+
+    measured_total = [0.0]  # Σ measured round durations = serial makespan
+
+    def round_runner(task, round_idx, allocation, t):
+        svc = router.services[task.task_id]
+        plan = RoundPlan.from_allocation(allocation, task.grades)
+        toks = rng.integers(1, cfg.vocab_size,
+                            size=(n_clients, seq + 1)).astype(np.int32)
+        batches = {"tokens": jnp.asarray(toks[:, None, :-1]),
+                   "targets": jnp.asarray(toks[:, None, 1:]),
+                   "mask": jnp.ones((n_clients, 1, seq), jnp.float32)}
+        outcome = sim.run_plan_round(
+            task.task_id, round_idx, svc.global_params, plan,
+            {"High": batches}, {"High": np.full(n_clients, seq)},
+            jax.random.PRNGKey(1000 * task.task_id + round_idx),
+            calibrator=cal)
+        measured_total[0] += outcome.makespan_s
+        return outcome.makespan_s  # measured duration times the next event
+
+    engine = TaskEngine(rm, cal, round_runner=round_runner,
+                        clock=flow.clock, elastic=True)
+    for task in tasks:
+        engine.submit(task)
+    t0 = time.perf_counter()
+    result = engine.drain()
+    wall_s = time.perf_counter() - t0
+    serial_est = measured_total[0]  # back-to-back = sum of round durations
+    for ex in result:
+        print(f"task {ex.task.task_id}: rounds={ex.rounds_done} "
+              f"start={ex.started_t:.0f}s finish={ex.finished_t:.0f}s "
+              f"reallocations={ex.reallocations} "
+              f"aggregations={len(router.services[ex.task.task_id].history)}",
+              flush=True)
+    print(f"interleaved makespan {engine.makespan:.0f}s vs serial estimate "
+          f"{serial_est:.0f}s ({serial_est / max(engine.makespan, 1e-9):.2f}x)"
+          f"; stranded={len(result.stranded)}; wall {wall_s:.1f}s", flush=True)
+    return {"makespan_s": engine.makespan, "serial_estimate_s": serial_est,
+            "completed": len(result), "stranded": len(result.stranded)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_2_3b")
@@ -241,6 +348,9 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--tasks", type=int, default=1,
+                    help="number of contending federated tasks; >1 runs the "
+                         "event-driven multi-task engine on one shared pool")
     ap.add_argument("--clients-per-round", type=int, default=8)
     ap.add_argument("--grades", default="High",
                     help="comma-separated device grades, e.g. High,Low")
@@ -263,6 +373,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.mode == "cloud":
         out = cloud_training(args)
+    elif args.tasks > 1:
+        out = multi_task_federated(args)
     else:
         out = federated_training(args)
     print("DONE", {k: v for k, v in out.items() if k != "losses"})

@@ -304,6 +304,133 @@ def test_checkpointer_materializes_handles(tmp_path):
     assert host["b"]["w"].shape == (3, 2)
 
 
+# --------------------------------------------------------------------------- #
+# Streaming chunk aggregation matches the one-shot fused path
+# --------------------------------------------------------------------------- #
+def _stream_tree(rng, n):
+    return {
+        "w": jnp.asarray(rng.standard_normal((n, 4, 8)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+    }
+
+
+@settings(max_examples=15, deadline=None)
+@given(chunks=st.lists(st.integers(1, 6), min_size=1, max_size=4),
+       seed=st.integers(0, 10_000), alpha=st.floats(0.0, 2.0),
+       order_seed=st.integers(0, 10_000))
+def test_streaming_matches_one_shot_across_chunk_orderings(
+        chunks, seed, alpha, order_seed):
+    """Property: streaming per-chunk partial aggregation reproduces the
+    one-shot ``fused_fedavg_delta`` result to 1e-6, whatever the chunk
+    sizes, global delivery order, and staleness weights."""
+    from repro.core.federation import polynomial_staleness
+
+    rng = np.random.default_rng(seed)
+    global_params = {
+        "w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal(3), jnp.float32),
+    }
+    buffers = [UpdateBuffer.from_stacked(_stream_tree(rng, n))
+               for n in chunks]
+    msgs = [Message(0, dev, int(rng.integers(0, 4)), buf.handle(row),
+                    num_samples=int(rng.integers(1, 6)))
+            for dev, (buf, row) in enumerate(
+                (b, r) for b in buffers for r in range(b.num_rows))]
+
+    def run(streaming, order):
+        svc = AggregationService(
+            jax.tree.map(jnp.array, global_params),
+            trigger=ClientCountTrigger(len(msgs)),
+            staleness_discount=polynomial_staleness(alpha),
+            streaming=streaming)
+        svc.round_idx = 3  # message round_idx in [0, 3] -> staleness > 0
+        for i in order:
+            svc(Delivery(t=float(i), message=msgs[i]))
+        assert len(svc.history) == 1
+        return svc.global_params
+
+    one_shot = run(False, range(len(msgs)))
+    perm = np.random.default_rng(order_seed).permutation(len(msgs))
+    streamed = run(True, perm)
+    for a, b in zip(jax.tree.leaves(streamed), jax.tree.leaves(one_shot)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_streaming_fires_partials_before_trigger():
+    """The point of streaming: a chunk's fed_reduce partial fires as soon as
+    the chunk's buffer has fully landed — not at trigger time."""
+    bufs = [UpdateBuffer.from_stacked({"w": jnp.ones((3, 2))}),
+            UpdateBuffer.from_stacked({"w": jnp.full((2, 2), 2.0)})]
+    svc = AggregationService({"w": jnp.zeros(2)},
+                             trigger=ClientCountTrigger(5), streaming=True)
+    for i, h in enumerate(bufs[0].handles()):
+        svc(Delivery(t=0.0, message=Message(0, i, 0, h, num_samples=1)))
+    assert len(svc._partials) == 1  # chunk 0 complete -> partial fired
+    assert len(svc.history) == 0  # trigger has not fired yet
+    assert svc.pending_clients == 3
+    for i, h in enumerate(bufs[1].handles()):
+        svc(Delivery(t=0.0, message=Message(0, 3 + i, 0, h, num_samples=1)))
+    assert len(svc.history) == 1
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]),
+                               [1.4, 1.4])  # (3*1 + 2*2) / 5
+
+
+def test_streaming_zero_weights_fall_back_to_uniform():
+    buf = UpdateBuffer.from_stacked({"w": jnp.asarray([[2.0], [4.0]])})
+    svc = AggregationService(
+        {"w": jnp.zeros(1)}, trigger=ClientCountTrigger(2),
+        staleness_discount=lambda s: 0.0, streaming=True)
+    for i, h in enumerate(buf.handles()):
+        svc(Delivery(t=0.0, message=Message(0, i, 0, h, num_samples=i + 1)))
+    assert len(svc.history) == 1
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]), [3.0])
+
+
+def test_streaming_folds_in_host_path_stragglers():
+    """Non-handle payloads delivered alongside streamed chunks join the fold
+    as a host-side weighted sum."""
+    buf = UpdateBuffer.from_stacked({"w": jnp.asarray([[2.0]])})
+    svc = AggregationService({"w": jnp.zeros(1)},
+                             trigger=ClientCountTrigger(2), streaming=True)
+    svc(Delivery(t=0.0, message=Message(0, 0, 0, buf.handle(0),
+                                        num_samples=1)))
+    svc(Delivery(t=0.0, message=Message(0, 1, 0, {"w": np.array([4.0])},
+                                        num_samples=3)))
+    assert len(svc.history) == 1
+    np.testing.assert_allclose(np.asarray(svc.global_params["w"]),
+                               [(2.0 + 3 * 4.0) / 4.0])
+
+
+def test_streaming_state_dict_roundtrip():
+    """Partially-aggregated streaming state survives save/load: restored
+    partials fold into the same aggregate."""
+    bufs = [UpdateBuffer.from_stacked({"w": jnp.asarray([[2.0], [4.0]])}),
+            UpdateBuffer.from_stacked({"w": jnp.asarray([[6.0]])})]
+
+    def feed(svc, upto):
+        handles = [(b, r) for b in bufs for r in range(b.num_rows)]
+        for i, (b, r) in enumerate(handles[:upto]):
+            svc(Delivery(t=0.0, message=Message(0, i, 0, b.handle(r),
+                                                num_samples=1)))
+
+    ref = AggregationService({"w": jnp.zeros(1)},
+                             trigger=ClientCountTrigger(3), streaming=True)
+    feed(ref, 3)
+
+    svc1 = AggregationService({"w": jnp.zeros(1)},
+                              trigger=ClientCountTrigger(3), streaming=True)
+    feed(svc1, 2)  # chunk 0 fired, trigger not yet
+    state = svc1.state_dict()
+    svc2 = AggregationService({"w": jnp.zeros(1)},
+                              trigger=ClientCountTrigger(3), streaming=True)
+    svc2.load_state_dict(state)
+    svc2(Delivery(t=0.0, message=Message(0, 2, 0, bufs[1].handle(0),
+                                         num_samples=1)))
+    assert len(svc2.history) == 1
+    np.testing.assert_allclose(np.asarray(svc2.global_params["w"]),
+                               np.asarray(ref.global_params["w"]))
+
+
 def test_update_buffer_validation_and_repr():
     with pytest.raises(ValueError):
         UpdateBuffer.from_stacked({"a": jnp.zeros((2, 3)), "b": jnp.zeros((4, 3))})

@@ -1,0 +1,286 @@
+"""Event-driven multi-task engine: interleaving, admission, elastic
+re-allocation, stranded-drain reporting, and mid-task checkpoint restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.allocation import GradeRuntime
+from repro.core.deviceflow import DeviceFlow, VirtualClock
+from repro.core.devicemodel import GRADES
+from repro.core.federation import AggregationService, ClientCountTrigger
+from repro.core.scheduler import (
+    ResourceManager,
+    ResourcePool,
+    StrandedTasksError,
+    TaskEngine,
+    TaskManager,
+    TaskRunner,
+    TaskState,
+)
+from repro.core.simulation import (
+    DeviceTier,
+    HybridSimulation,
+    LogicalTier,
+    RoundPlan,
+)
+from repro.core.strategies import AccumulatedStrategy
+from repro.core.task import GradeSpec, OperatorFlow, Task
+from repro.models import ctr as ctr_lib
+
+FLOW = OperatorFlow(("train",))
+RTS = lambda t: [GradeRuntime(alpha=5.0, beta=8.0, lam=2.0)] * len(t.grades)
+
+
+def make_task(*, rounds=3, priority=0, bundles=8, phones=2, n=10):
+    return Task(FLOW, (GradeSpec("High", n, logical_bundles=bundles,
+                                 physical_devices=phones),),
+                rounds=rounds, priority=priority)
+
+
+def test_engine_interleaves_tasks_and_beats_serial_drain():
+    """Three tasks whose demands fit one pool simultaneously: the engine
+    interleaves their round events; serial drain runs them back to back."""
+    order = []
+    rm = ResourceManager(ResourcePool({"High": 24}, {"High": 6}))
+    eng = TaskEngine(rm, RTS,
+                     on_round_complete=lambda t, r: order.append((t.task_id, r)))
+    tasks = [make_task() for _ in range(3)]
+    for t in tasks:
+        eng.submit(t)
+    res = eng.drain()
+    assert len(res) == 3 and not res.stranded
+    assert all(ex.state is TaskState.COMPLETED for ex in res)
+
+    # Rounds interleave in virtual time: round 0 of every task runs before
+    # round 1 of any (they all start at t=0 on the shared clock).
+    first_r1 = order.index(next(o for o in order if o[1] == 1))
+    assert {o[0] for o in order[:first_r1]} == {t.task_id for t in tasks}
+
+    rm2 = ResourceManager(ResourcePool({"High": 24}, {"High": 6}))
+    clock = VirtualClock()
+    tm = TaskManager(rm2, TaskRunner(
+        rm2, RTS, tier_runners={"logical": lambda *a: [],
+                                "device": lambda *a: []}, clock=clock))
+    for _ in range(3):
+        tm.submit(make_task())
+    tm.drain(strict=True)
+    assert clock.now >= 1.5 * eng.makespan  # 3x here, gate conservatively
+
+
+def test_engine_admits_queued_task_when_resources_free():
+    """A task that does not fit waits in the queue and is admitted at the
+    event boundary where the running task releases its resources."""
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 2}))
+    eng = TaskEngine(rm, RTS, elastic=False)
+    a, b = make_task(rounds=2), make_task(rounds=1)
+    eng.submit(a)
+    eng.submit(b)
+    res = eng.drain()
+    assert [ex.task.task_id for ex in res] == [a.task_id, b.task_id]
+    ex_a, ex_b = res
+    assert ex_b.started_t == pytest.approx(ex_a.finished_t)
+
+
+def test_engine_elastic_reallocation_on_scale():
+    """A task admitted on a partial grant runs immediately on what is free
+    and re-solves its allocation when ``ResourceManager.scale`` grows the
+    pool mid-task — beating the paper-style static split where it waits for
+    its full request."""
+
+    def build(elastic):
+        rm = ResourceManager(ResourcePool({"High": 12}, {"High": 2}))
+        eng = TaskEngine(rm, RTS, elastic=elastic)
+        a = make_task(rounds=3, priority=1)  # freezes (8, 2)
+        b = make_task(rounds=2, bundles=8, phones=0)  # wants (8, 0)
+        eng.submit(a)
+        eng.submit(b)
+        return rm, eng, a, b
+
+    rm, eng, a, b = build(elastic=True)
+    eng.clock.schedule(1.0, lambda: rm.scale("High", bundles_delta=4))
+    eng.run_until()
+    ex_b = eng.executions[b.task_id]
+    assert ex_b.state is TaskState.COMPLETED
+    assert ex_b.started_t == pytest.approx(0.0)  # ran on the (4, 0) leftover
+    assert ex_b.reallocations >= 1  # topped up at the scale event boundary
+    assert ex_b.grant == {"High": (8, 0)}  # reached its full request
+
+    # Static split: no elastic grants — b waits until a releases the pool.
+    rm2, eng2, a2, b2 = build(elastic=False)
+    eng2.run_until()
+    ex_b2 = eng2.executions[b2.task_id]
+    assert ex_b2.started_t == pytest.approx(
+        eng2.executions[a2.task_id].finished_t)
+    assert eng.makespan < eng2.makespan
+
+
+def test_engine_pool_shrink_only_affects_future_admissions():
+    rm = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+    eng = TaskEngine(rm, RTS)
+    a = make_task(rounds=2)
+    eng.submit(a)
+    eng.clock.schedule(1.0, lambda: rm.scale("High", bundles_delta=-8,
+                                             phones_delta=-2))
+    eng.run_until()
+    assert eng.executions[a.task_id].state is TaskState.COMPLETED
+    free = rm.free()
+    assert free.logical_bundles["High"] == 8 and free.physical_devices["High"] == 2
+
+
+def test_drain_reports_stranded_tasks_and_strict_raises():
+    """Satellite fix: a drain that leaves tasks queued is no longer silent."""
+    rm = ResourceManager(ResourcePool({"High": 4}, {"High": 0}))
+    runner = TaskRunner(rm, RTS, tier_runners={"logical": lambda *a: [],
+                                               "device": lambda *a: []})
+    tm = TaskManager(rm, runner)
+    fits = make_task(bundles=4, phones=0, rounds=1)
+    too_big = make_task(bundles=40, phones=7, rounds=1)
+    tm.submit(fits)
+    tm.submit(too_big)
+    out = tm.drain()
+    assert [r.task.task_id for r in out] == [fits.task_id]
+    assert [t.task_id for t in out.stranded] == [too_big.task_id]
+    assert out.stranded_reason == "nothing-fits"
+    with pytest.raises(StrandedTasksError, match="nothing-fits"):
+        tm.drain(strict=True)
+    # A clean drain reports no stranded work.
+    rm2 = ResourceManager(ResourcePool({"High": 4}, {"High": 0}))
+    tm2 = TaskManager(rm2, TaskRunner(
+        rm2, RTS, tier_runners={"logical": lambda *a: [],
+                                "device": lambda *a: []}))
+    tm2.submit(make_task(bundles=4, phones=0, rounds=1))
+    out2 = tm2.drain(strict=True)
+    assert len(out2) == 1 and not out2.stranded and out2.stranded_reason is None
+
+
+def test_engine_failed_round_releases_resources():
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 2}))
+
+    def boom(task, round_idx, allocation, t):
+        raise RuntimeError("injected round failure")
+
+    eng = TaskEngine(rm, RTS, round_runner=boom)
+    a = make_task(rounds=2)
+    eng.submit(a)
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.run_until()
+    assert eng.executions[a.task_id].state is TaskState.FAILED
+    assert rm.free().logical_bundles["High"] == 8  # released on failure
+
+
+# --------------------------------------------------------------------------- #
+# Mid-task checkpoint round-trip (engine + streaming aggregation state)
+# --------------------------------------------------------------------------- #
+def _sim_setup(n, dim, rpd):
+    """One-task federated CTR setup with streaming aggregation."""
+    local = ctr_lib.make_local_train_fn(lr=1e-2, epochs=2)
+    params = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    # Trigger needs BOTH rounds' clients: round 1's deliveries leave
+    # partially-aggregated streaming partials pending at the snapshot.
+    svc = AggregationService(jax.tree.map(jnp.array, params),
+                             trigger=ClientCountTrigger(2 * n),
+                             streaming=True)
+    flow = DeviceFlow(svc)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    sim = HybridSimulation(
+        LogicalTier(local, cohort_size=max(2, n // 2)),
+        tiers={"High": DeviceTier(local, GRADES["High"],
+                                  cohort_size=max(2, n // 2))},
+        deviceflow=flow, stream_chunks=True)
+    return sim, svc, flow
+
+
+def _mk_engine(sim, svc, rm, cal, n, dim, rpd):
+    def round_runner(t, round_idx, allocation, now):
+        rng = np.random.default_rng(5_000 + round_idx)
+        batches = {
+            "x": jnp.asarray(rng.standard_normal((n, rpd, dim)), jnp.float32),
+            "y": jnp.asarray((rng.random((n, rpd)) < 0.3), jnp.float32),
+            "mask": jnp.ones((n, rpd), jnp.float32),
+        }
+        plan = RoundPlan.from_allocation(allocation, t.grades)
+        out = sim.run_plan_round(
+            0, round_idx, svc.global_params, plan, {"High": batches},
+            {"High": np.full(n, rpd)}, jax.random.PRNGKey(round_idx),
+            calibrator=cal)
+        return out.makespan_s
+
+    # The calibrator is the runtimes provider: admissions after round 0
+    # allocate on measured (not Table-I) runtimes, so the restore path must
+    # reload its observations to reproduce the timeline.
+    return TaskEngine(rm, cal, round_runner=round_runner,
+                      clock=sim.deviceflow.clock)
+
+
+def test_engine_checkpoint_roundtrip_mid_task(tmp_path):
+    """Pending round events, streaming partials, queue, and frozen resources
+    survive a Checkpointer round-trip; the resumed run reproduces the
+    uninterrupted run's timeline and final params exactly."""
+    n, dim, rpd = 8, 16, 4
+
+    def fresh(rounds=2, queued=True):
+        sim, svc, flow = _sim_setup(n, dim, rpd)
+        rm = ResourceManager(ResourcePool({"High": 4}, {"High": 2}))
+        task = make_task(rounds=rounds, bundles=4, phones=2, n=n)
+        from repro.core.calibration import RuntimeCalibrator
+        cal = RuntimeCalibrator()
+        eng = _mk_engine(sim, svc, rm, cal, n, dim, rpd)
+        blocked = make_task(rounds=1, bundles=4, phones=2, n=n) if queued \
+            else None
+        return sim, svc, rm, task, eng, blocked, cal
+
+    # --- uninterrupted reference run -----------------------------------
+    sim, svc, rm, task, eng, blocked, _cal = fresh()
+    eng.submit(task)
+    eng.submit(blocked)  # does not fit while `task` holds the pool
+    eng.run_until()
+    ref_params = jax.device_get(svc.global_params)
+    ref_makespan = eng.makespan
+    ref_finished = {ex.task.task_id: ex.finished_t for ex in eng.completed}
+    assert len(eng.completed) == 2  # blocked task ran after the first
+
+    # --- interrupted run: snapshot after round 0's event ----------------
+    sim1, svc1, rm1, task1, eng1, blocked1, cal1 = fresh()
+    eng1.submit(task1)
+    eng1.submit(blocked1)
+    # Run exactly past the first round event: one round executed, its
+    # streaming partials pending (trigger needs both rounds), next round
+    # event scheduled, queue still holding the blocked task.
+    while eng1.executions.get(task1.task_id) is None or \
+            eng1.executions[task1.task_id].rounds_done < 1:
+        assert eng1.clock.run_one()
+    ex1 = eng1.executions[task1.task_id]
+    assert ex1.rounds_done == 1 and ex1.next_event_t is not None
+    assert svc1._partials or svc1._chunks  # mid-aggregation streaming state
+    assert len(eng1.queue) == 1
+
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"svc": svc1.state_dict(),
+                "params": jax.device_get(svc1.global_params)},
+            extra={"engine": eng1.state_dict(),
+                   "fleet": sim1.tiers["High"].fleet.state_dict(),
+                   "calibrator": cal1.state_dict()})
+
+    # --- restore into a fresh world and resume --------------------------
+    sim2, svc2, rm2, _, eng2, _, cal2 = fresh()
+    tree, extra = ck.restore(
+        {"svc": svc1.state_dict(), "params": jax.device_get(svc1.global_params)})
+    svc2.load_state_dict(tree["svc"])
+    svc2.global_params = jax.tree.map(jnp.asarray, tree["params"])
+    sim2.tiers["High"].fleet.load_state_dict(extra["fleet"])
+    cal2.load_state_dict(extra["calibrator"])  # measured runtimes drive
+    eng2.load_state_dict(extra["engine"], tasks=[task1, blocked1])  # re-solve
+    assert rm2.frozen(task1.task_id) == {"High": (4, 2)}
+    eng2.run_until()
+
+    got_params = jax.device_get(svc2.global_params)
+    for a, b in zip(jax.tree.leaves(got_params), jax.tree.leaves(ref_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert eng2.makespan == pytest.approx(ref_makespan)
+    got_finished = {ex.task.task_id: ex.finished_t for ex in eng2.completed}
+    assert {task1.task_id: got_finished[task1.task_id],
+            blocked1.task_id: got_finished[blocked1.task_id]} \
+        == pytest.approx({task1.task_id: ref_finished[task.task_id],
+                          blocked1.task_id: ref_finished[blocked.task_id]})

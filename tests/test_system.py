@@ -95,6 +95,46 @@ def test_traffic_curve_shifts_aggregation_timing():
     assert results[1.0] < results[3.0]
 
 
+def test_serve_pipeline_handle_payloads_and_traffic_accounting():
+    """Satellite: serving-path token messages carry handle payloads with
+    real ``payload_nbytes``, so DeviceFlow byte accounting covers serving
+    traffic; same-buffer batches gather prompts on device."""
+    from repro.launch.serve import BatchedServer, stack_requests
+    from repro.configs.registry import get_config
+
+    cfg = get_config("llama3_2_3b", smoke=True)
+    prompt_len, n_req = 8, 4
+    server = BatchedServer(cfg, batch_size=2, prompt_len=prompt_len,
+                           decode_tokens=4, max_len=16)
+    flow = DeviceFlow(server)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size,
+                        size=(n_req, prompt_len)).astype(np.int32)
+    buf = stack_requests(toks)
+    for i in range(n_req):
+        flow.submit(Message(0, i, 0, payload=buf.handle(i)))
+    flow.run()
+    server.drain(flow.clock.now)
+    assert sum(m.tokens_decoded for m in server.metrics) == 16
+    shelf = flow.shelf(0)
+    # Every request message reports its true wire size (prompt_len int32s).
+    assert shelf.total_bytes_dispatched == n_req * prompt_len * 4
+
+    # Same prompts as host-dict payloads decode the same tokens (the handle
+    # path is accounting + transport, not numerics).
+    server2 = BatchedServer(cfg, batch_size=2, prompt_len=prompt_len,
+                            decode_tokens=4, max_len=16)
+    flow2 = DeviceFlow(server2)
+    flow2.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    for i in range(n_req):
+        flow2.submit(Message(0, i, 0, payload={"tokens": toks[i]}))
+    flow2.run()
+    server2.drain(flow2.clock.now)
+    assert (sum(m.tokens_decoded for m in server2.metrics)
+            == sum(m.tokens_decoded for m in server.metrics))
+
+
 def test_serve_pipeline_end_to_end():
     from repro.launch.serve import BatchedServer
     from repro.configs.registry import get_config
