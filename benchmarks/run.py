@@ -31,12 +31,14 @@ from benchmarks import common  # noqa: E402
 from benchmarks.paper_benchmarks import ALL_BENCHMARKS  # noqa: E402
 
 QUICK_BENCHMARKS = ("fig8_device_tier_batched", "multi_grade_round",
-                    "round_pipeline", "multi_task_schedule")
+                    "round_pipeline", "multi_task_schedule",
+                    "multi_task_preemption")
 
 # Throughput-ish metrics worth tracking across PRs (higher is better except
-# slowdown/makespan_s; the diff just reports the ratio either way).
+# slowdown/makespan_s/queueing_delay_s; the diff just reports the ratio
+# either way).
 DIFF_METRICS = ("devices_per_s", "speedup", "slowdown", "per_device_us",
-                "makespan_s")
+                "makespan_s", "queueing_delay_s")
 
 
 def parse_derived(derived: str) -> dict:

@@ -31,9 +31,12 @@ def _jsonify(obj: Any) -> Any:
     """JSON-safe view of manifest ``extra`` state.
 
     Engine/service state_dicts carry numpy scalars (virtual-time stamps),
-    small arrays, and tuples (resource grants); ``json.dumps`` rejects the
-    numpy types outright, so normalize here instead of pushing the
-    conversion burden onto every caller.
+    small arrays, tuples (resource grants), and rng bit-generator states
+    (arbitrary-precision ints — JSON-safe in Python); ``json.dumps``
+    rejects the numpy types outright, so normalize here instead of pushing
+    the conversion burden onto every caller.  Anything else fails *here*,
+    named, rather than as an opaque ``json.dumps`` error after the
+    checkpoint tempdir was already built.
     """
     if isinstance(obj, dict):
         return {str(k): _jsonify(v) for k, v in obj.items()}
@@ -43,7 +46,12 @@ def _jsonify(obj: Any) -> Any:
         return obj.item()
     if isinstance(obj, np.ndarray):
         return obj.tolist()
-    return obj
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    raise TypeError(
+        f"manifest extra contains a non-JSON-serializable "
+        f"{type(obj).__name__}; encode it in the state_dict (live objects "
+        f"— Tasks, device buffers — are re-supplied on restore, not saved)")
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:

@@ -8,7 +8,9 @@ from repro.core.allocation import (
 )
 from repro.core.calibration import (
     RuntimeCalibrator,
+    ScheduleEstimate,
     calibrate_runtimes,
+    monte_carlo_schedules,
     table1_runtime,
 )
 from repro.core.deviceflow import Delivery, DeviceFlow, Message, Shelf, VirtualClock
@@ -38,6 +40,7 @@ from repro.core.scheduler import (
     TaskManager,
     TaskRunner,
     TaskScheduler,
+    TaskState,
 )
 from repro.core.strategies import (
     AccumulatedStrategy,

@@ -75,13 +75,18 @@ class Message(_Weakrefable):
     ``__dict__``s are real memory at fleet scale.  ``size_bytes`` is
     auto-computed from the payload when not given, so DeviceFlow traffic
     accounting reflects real model-update sizes instead of defaulting to 0.
+
+    ``created_t=None`` means *unstamped* — the Sorter stamps it at submit
+    time.  (``0.0`` used to double as the sentinel, which silently
+    re-stamped producer-stamped t=0 messages submitted later and corrupted
+    latency accounting; a producer-stamped ``0.0`` is now preserved.)
     """
 
     task_id: int
     device_id: int
     round_idx: int
     payload: Any
-    created_t: float = 0.0
+    created_t: float | None = None
     num_samples: int = 1
     size_bytes: int = 0
 
@@ -359,7 +364,7 @@ class DeviceFlow:
             raise KeyError(
                 f"message for unregistered task {msg.task_id}"
             ) from None
-        if msg.created_t == 0.0 and t != 0.0:
+        if msg.created_t is None:
             msg = dataclasses.replace(msg, created_t=t)
         shelf.put(msg)
         self._dispatchers[msg.task_id].on_message(t)
@@ -397,7 +402,7 @@ class DeviceFlow:
             stamped = []
             for i in order:
                 m, t = msgs[i], float(ts_arr[i])
-                if m.created_t == 0.0 and t != 0.0:
+                if m.created_t is None:
                     m = dataclasses.replace(m, created_t=t)
                 stamped.append(m)
             shelf.put_many(stamped)

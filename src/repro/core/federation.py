@@ -284,7 +284,10 @@ class AggregationService:
     def __call__(self, d: Delivery) -> None:
         m = d.message
         self._pending_samples += m.num_samples
-        self._pending_latency += max(0.0, d.t - m.created_t)
+        # created_t is None for messages delivered without passing through a
+        # DeviceFlow Sorter (direct service calls): no queuing, zero latency.
+        if m.created_t is not None:
+            self._pending_latency += max(0.0, d.t - m.created_t)
         if (self.streaming and isinstance(m.payload, UpdateHandle)
                 and self._stream_aligned(m.payload.buffer)):
             self._stream_add(m)

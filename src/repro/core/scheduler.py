@@ -16,7 +16,11 @@
   ``VirtualClock`` instead of draining tasks back to back, queued tasks are
   admitted at event boundaries, and a task's allocation is re-solved when
   ``ResourceManager.scale`` changes the pool mid-task (elastic
-  re-allocation, vs the paper's static split).
+  re-allocation, vs the paper's static split).  With ``preemptive=True`` a
+  higher-priority arrival — or a ``scale(reclaim=True)`` pool shrink — may
+  *refreeze down* lower-priority running grants at their next round-event
+  boundary (pausing a task back to the queue when its grant clamps to
+  zero), so priority expresses reclamation, not just admission order.
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ from repro.core.task import Task, TaskQueue
 class TaskState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
+    PAUSED = "paused"  # preempted to the queue; resumes with progress kept
     COMPLETED = "completed"
     FAILED = "failed"
 
@@ -58,11 +63,27 @@ class ResourceManager:
     def free(self) -> ResourcePool:
         return self._free.copy()
 
+    def total(self) -> ResourcePool:
+        return self._total.copy()
+
+    def deficit(self, grade: str) -> tuple[int, int]:
+        """How far the free pool is below zero for ``grade``.
+
+        Non-zero only after ``scale(..., reclaim=True)`` removed capacity
+        that running tasks still hold; pool listeners (the ``TaskEngine``)
+        pay it down by shrinking grants at round-event boundaries.
+        """
+        return (max(0, -self._free.logical_bundles.get(grade, 0)),
+                max(0, -self._free.physical_devices.get(grade, 0)))
+
     def fits(self, demand: dict[str, tuple[int, int]]) -> bool:
+        # Per component, and only where something is actually requested: a
+        # zero component takes nothing, so it fits even while that
+        # component's free pool is in deficit (``scale(reclaim=True)``).
         for grade, (bundles, phones) in demand.items():
-            if self._free.logical_bundles.get(grade, 0) < bundles:
+            if bundles > 0 and self._free.logical_bundles.get(grade, 0) < bundles:
                 return False
-            if self._free.physical_devices.get(grade, 0) < phones:
+            if phones > 0 and self._free.physical_devices.get(grade, 0) < phones:
                 return False
         return True
 
@@ -99,36 +120,74 @@ class ResourceManager:
     def refreeze(self, task_id: int, demand: dict[str, tuple[int, int]]) -> None:
         """Atomically replace a task's frozen grant (elastic re-allocation).
 
-        Rolls back to the old grant if the new one does not fit.
+        Validates against the pool *as it would look after releasing the old
+        grant* and raises without mutating anything when the new grant does
+        not fit — a release-then-rollback would itself fail whenever the
+        free pool is in deficit (``scale(reclaim=True)``), stranding the
+        task's resources half-released.
         """
         old = self._frozen.get(task_id)
         if old is None:
             raise KeyError(f"task {task_id} holds no frozen resources")
+        for grade, (bundles, phones) in demand.items():
+            old_b, old_p = old.get(grade, (0, 0))
+            # Validate per component, and only the GROWING ones: a component
+            # at or below its old value releases capacity and is always
+            # legal — even while that component's free pool is in deficit
+            # (paying a deficit down must not be blocked by the deficit).
+            if (bundles > old_b
+                    and self._free.logical_bundles.get(grade, 0)
+                    < bundles - old_b) or (
+                    phones > old_p
+                    and self._free.physical_devices.get(grade, 0)
+                    < phones - old_p):
+                raise ValueError(
+                    f"refreeze for task {task_id} does not fit free pool")
         self.release(task_id)
-        try:
-            self.freeze(task_id, demand)
-        except ValueError:
-            self.freeze(task_id, old)
-            raise
+        for grade, (bundles, phones) in demand.items():
+            self._free.logical_bundles[grade] = (
+                self._free.logical_bundles.get(grade, 0) - bundles
+            )
+            self._free.physical_devices[grade] = (
+                self._free.physical_devices.get(grade, 0) - phones
+            )
+        self._frozen[task_id] = dict(demand)
 
     # -- elastic scaling (paper: "dynamic scaling up or down") ------------------
     def subscribe(self, fn: Callable[[], None]) -> None:
         """Register a pool-change listener (fired after every ``scale``)."""
         self._listeners.append(fn)
 
-    def scale(self, grade: str, *, bundles_delta: int = 0, phones_delta: int = 0) -> None:
-        """Add/remove capacity.  Removal never takes frozen resources."""
-        for field, delta in (
-            ("logical_bundles", bundles_delta),
-            ("physical_devices", phones_delta),
-        ):
-            free = getattr(self._free, field)
-            total = getattr(self._total, field)
-            if delta < 0 and free.get(grade, 0) + delta < 0:
+    def scale(self, grade: str, *, bundles_delta: int = 0,
+              phones_delta: int = 0, reclaim: bool = False) -> None:
+        """Add/remove capacity.
+
+        Removal never takes frozen resources — unless ``reclaim=True``,
+        which lets the free pool go *negative*: the shortfall is a recorded
+        ``deficit`` that pool listeners (the ``TaskEngine``) pay down by
+        refreezing running grants *down* at their next round-event boundary.
+        ``free + frozen == total`` holds throughout either way.
+
+        Both fields are validated before either is mutated (a rejected
+        shrink must not leave the free/total pools inconsistent), and a
+        zero-delta call is a no-op that does not fire listeners (no spurious
+        re-solves).
+        """
+        deltas = (("logical_bundles", bundles_delta),
+                  ("physical_devices", phones_delta))
+        if bundles_delta == 0 and phones_delta == 0:
+            return
+        for field, delta in deltas:
+            limit = getattr(self._total if reclaim else self._free, field)
+            if delta < 0 and limit.get(grade, 0) + delta < 0:
                 raise ValueError(
                     f"cannot remove {-delta} {field} of grade {grade}: "
-                    f"only {free.get(grade, 0)} free"
+                    f"only {limit.get(grade, 0)} "
+                    f"{'total' if reclaim else 'free'}"
                 )
+        for field, delta in deltas:
+            free = getattr(self._free, field)
+            total = getattr(self._total, field)
             free[grade] = free.get(grade, 0) + delta
             total[grade] = total.get(grade, 0) + delta
         for fn in self._listeners:
@@ -252,6 +311,24 @@ class TaskRunner:
 # --------------------------------------------------------------------------- #
 # Event-driven multi-task engine
 # --------------------------------------------------------------------------- #
+def _encode_allocation(a: alloc.AllocationResult) -> dict:
+    return {"makespan": a.makespan,
+            "per_grade": [dataclasses.asdict(g) for g in a.per_grade]}
+
+
+def _decode_allocation(d: Mapping) -> alloc.AllocationResult:
+    return alloc.AllocationResult(
+        makespan=float(d["makespan"]),
+        per_grade=tuple(
+            alloc.GradeAllocation(
+                grade=g["grade"],
+                logical_devices=int(g["logical_devices"]),
+                physical_devices=int(g["physical_devices"]),
+                logical_time=float(g["logical_time"]),
+                physical_time=float(g["physical_time"]))
+            for g in d["per_grade"]))
+
+
 @dataclasses.dataclass
 class TaskExecution:
     """Live state of one admitted task inside ``TaskEngine``."""
@@ -262,14 +339,37 @@ class TaskExecution:
     state: TaskState = TaskState.RUNNING
     rounds_done: int = 0
     started_t: float = 0.0
+    submitted_t: float = 0.0
     next_event_t: float | None = None
     finished_t: float | None = None
-    reallocations: int = 0  # elastic grant upgrades applied mid-task
+    reallocations: int = 0  # elastic grant changes applied mid-task (both ways)
+    preemptions: int = 0  # times this task was shrunk or paused by preemption
+    # Reclamation marked by a higher-priority arrival / pool shrink; applied
+    # (refreeze-down or pause) at this task's next round-event boundary.
+    pending_shrink: dict[str, tuple[int, int]] | None = None
+    paused_t: float | None = None  # when the current pause began
+    queued_s: float = 0.0  # total virtual time spent waiting in the queue
+    running_s: float = 0.0  # total virtual time spent RUNNING (grant held)
+    grant_seconds: float = 0.0  # ∫ (grant / full demand) dt while RUNNING
+    accrued_t: float = 0.0  # last time the two integrals above were updated
     generation: int = 0  # invalidates stale scheduled events
 
     @property
     def full_grant(self) -> bool:
         return self.grant == self.task.demand()
+
+    @property
+    def queueing_delay_s(self) -> float:
+        """Total virtual time spent waiting: submission→first start plus
+        every preemption pause (the fairness metric preemptive scheduling
+        trades against low-priority progress)."""
+        return self.queued_s
+
+    @property
+    def grant_utilization(self) -> float:
+        """Time-averaged fraction of the full demand actually held while
+        running (1.0 = never clamped or shrunk)."""
+        return self.grant_seconds / self.running_s if self.running_s > 0 else 0.0
 
 
 class StrandedTasksError(RuntimeError):
@@ -324,6 +424,20 @@ class TaskEngine:
       studies and tests).  Passing a ``RuntimeCalibrator`` as ``runtimes``
       plus a ``duration_rng`` draws *sampled* observed runtimes per round,
       so event timestamps carry measured round-to-round jitter.
+    * **Preemption** (``preemptive=True``) — a queued task whose demand does
+      not fit may *reclaim* resources from strictly-lower-priority running
+      tasks: victims are marked with a ``pending_shrink`` that applies at
+      their next round-event boundary — the grant is refrozen *down* (the
+      remaining rounds re-solved on the shrunken ``effective_grades``, and
+      re-timed via ``RuntimeCalibrator.sample_for_task`` when a
+      ``duration_rng`` is set) or, when clamped to zero, the task is PAUSED
+      back to the queue with its round progress kept.  ``scale(...,
+      reclaim=True)`` pool shrinks are paid down the same way (victims in
+      ascending priority order), so the traffic controller's "dynamic
+      scaling down" works even when the whole pool is frozen.  Every shrink
+      and regrow counts in ``TaskExecution.reallocations``; per-task
+      ``queueing_delay_s`` / ``grant_utilization`` quantify what preemption
+      costs the victims.
 
     Share the clock with a ``DeviceFlow`` (``clock=flow.clock``) and round
     events interleave with dispatch/delivery events on one timeline.
@@ -338,6 +452,7 @@ class TaskEngine:
         round_runner: RoundRunner | None = None,
         clock: VirtualClock | None = None,
         elastic: bool = True,
+        preemptive: bool = False,
         duration_rng=None,
         on_round_complete: Callable[[Task, int], None] | None = None,
         on_task_complete: Callable[[TaskExecution], None] | None = None,
@@ -351,18 +466,36 @@ class TaskEngine:
         self.round_runner = round_runner
         self.clock = clock or VirtualClock()
         self.elastic = elastic
+        self.preemptive = preemptive
         self.on_round_complete = on_round_complete
         self.on_task_complete = on_task_complete
         self.queue = TaskQueue()
         self.executions: dict[int, TaskExecution] = {}
         self.completed: list[TaskExecution] = []
+        self._submitted_t: dict[int, float] = {}
+        # Deferred arrivals not yet on the queue: task -> arrival time.
+        # Tracked (not just scheduled) so state_dict can serialize them —
+        # clock callbacks themselves never survive a checkpoint.
+        self._pending_arrivals: dict[int, tuple[Task, float]] = {}
         resources.subscribe(self._on_pool_change)
 
     # -- submission ---------------------------------------------------------
-    def submit(self, task: Task) -> int:
+    def submit(self, task: Task, *, at: float | None = None) -> int:
+        """Queue ``task``; with ``at`` the submission itself becomes a clock
+        event (an *arrival*), so queueing delay is measured from then."""
+        if at is not None and at > self.clock.now:
+            self._pending_arrivals[task.task_id] = (task, float(at))
+            self.clock.schedule(at, lambda: self._arrive(task.task_id))
+            return task.task_id
+        self._submitted_t.setdefault(task.task_id, self.clock.now)
         tid = self.queue.submit(task)
         self.clock.schedule(self.clock.now, self._admit)
         return tid
+
+    def _arrive(self, tid: int) -> None:
+        got = self._pending_arrivals.pop(tid, None)
+        if got is not None:  # None: stale callback (restored elsewhere)
+            self.submit(got[0])
 
     # -- allocation ---------------------------------------------------------
     def _round_runtimes(self, task: Task) -> list[alloc.GradeRuntime]:
@@ -383,18 +516,58 @@ class TaskEngine:
             return None
         free = self.resources.free()
         clamped = {
-            g: (min(b, free.logical_bundles.get(g, 0)),
-                min(p, free.physical_devices.get(g, 0)))
+            # max(0): a reclaim deficit makes free components NEGATIVE — a
+            # grant must never carry one (it would silently absorb the
+            # deficit and oversubscribe the pool).
+            g: (max(0, min(b, free.logical_bundles.get(g, 0))),
+                max(0, min(p, free.physical_devices.get(g, 0))))
             for g, (b, p) in demand.items()
         }
         if not any(b or p for b, p in clamped.values()):
             return None
         return clamped
 
+    # -- accounting ----------------------------------------------------------
+    def _grant_frac(self, ex: TaskExecution) -> float:
+        """Fraction of the task's full demand currently held (mean across
+        the requested resource components)."""
+        fracs = []
+        for g, (rb, rp) in ex.task.demand().items():
+            gb, gp = ex.grant.get(g, (0, 0))
+            if rb:
+                fracs.append(gb / rb)
+            if rp:
+                fracs.append(gp / rp)
+        return sum(fracs) / len(fracs) if fracs else 1.0
+
+    def _accrue(self, ex: TaskExecution) -> None:
+        """Fold elapsed virtual time into the running/utilization integrals.
+
+        Must be called *before* any grant or state change so the closing
+        interval is weighted by the grant that was actually held."""
+        now = self.clock.now
+        dt = now - ex.accrued_t
+        if ex.state is TaskState.RUNNING and dt > 0:
+            ex.running_s += dt
+            ex.grant_seconds += self._grant_frac(ex) * dt
+        ex.accrued_t = now
+
     # -- event handlers ------------------------------------------------------
     def _admit(self) -> None:
-        """Admit every queued task (priority order) with a feasible grant."""
+        """Admit every queued task (priority order) with a feasible grant.
+
+        PAUSED tasks ride the queue like fresh submissions (same priority
+        ordering) and *resume* their existing execution — round progress,
+        reallocation counts, and delay accounting carry over.  In
+        ``preemptive`` mode, tasks still queued afterwards may mark
+        refreeze-down shrinks on lower-priority running tasks.
+        """
+        now = self.clock.now
         for task in list(self.queue.pending()):
+            tid = task.task_id
+            paused = self.executions.get(tid)
+            if paused is not None and paused.state is not TaskState.PAUSED:
+                continue  # stale queue entry for a live/finished execution
             grant = self._grant_for(task)
             if grant is None:
                 continue
@@ -402,12 +575,125 @@ class TaskEngine:
                 allocation = self._solve(task, grant)
             except ValueError:  # grant infeasible (a grade got no resources)
                 continue
-            self.resources.freeze(task.task_id, grant)
-            self.queue.remove(task.task_id)
-            ex = TaskExecution(task=task, grant=grant, allocation=allocation,
-                               started_t=self.clock.now)
-            self.executions[task.task_id] = ex
-            self._schedule(ex, self.clock.now, self._round_event)
+            self.resources.freeze(tid, grant)
+            self.queue.remove(tid)
+            if paused is not None:  # resume a preempted task
+                ex = paused
+                ex.queued_s += now - (ex.paused_t if ex.paused_t is not None
+                                      else now)
+                ex.paused_t = None
+                ex.state = TaskState.RUNNING
+                ex.grant = grant
+                ex.allocation = allocation
+                ex.reallocations += 1  # the regrow is a recorded re-allocation
+                ex.accrued_t = now
+            else:
+                sub_t = self._submitted_t.get(tid, now)
+                ex = TaskExecution(task=task, grant=grant,
+                                   allocation=allocation, started_t=now,
+                                   submitted_t=sub_t, queued_s=now - sub_t,
+                                   accrued_t=now)
+                self.executions[tid] = ex
+            self._schedule(ex, now, self._round_event)
+        if self.preemptive:
+            for task in list(self.queue.pending()):
+                self._mark_preemption(task)
+            # A high-priority task elastically admitted on a *partial* grant
+            # still deserves its remainder: reclaim it from lower-priority
+            # running tasks too (its own held grant counts toward demand).
+            for ex in sorted((e for e in self.executions.values()
+                              if e.state is TaskState.RUNNING
+                              and not e.full_grant),
+                             key=lambda e: (-e.task.priority, e.task.task_id)):
+                self._mark_preemption(ex.task, held=ex.grant)
+
+    def _pending_totals(self) -> dict[str, list[int]]:
+        """Per-grade reclamation already marked but not yet applied."""
+        tot: dict[str, list[int]] = {}
+        for ex in self.executions.values():
+            if ex.state is TaskState.RUNNING and ex.pending_shrink:
+                for g, (b, p) in ex.pending_shrink.items():
+                    cur = tot.setdefault(g, [0, 0])
+                    cur[0] += b
+                    cur[1] += p
+        return tot
+
+    def _mark_shrinks(self, deficit: dict[str, list[int]],
+                      victims: Iterable[TaskExecution]) -> None:
+        """Spread ``deficit`` across ``victims`` as pending shrinks (applied
+        at each victim's next round-event boundary)."""
+        for ex in victims:
+            if not deficit:
+                return
+            take: dict[str, tuple[int, int]] = {}
+            for g in list(deficit):
+                db, dp = deficit[g]
+                gb, gp = ex.grant.get(g, (0, 0))
+                pb, pp = (ex.pending_shrink or {}).get(g, (0, 0))
+                tb, tp = min(gb - pb, db), min(gp - pp, dp)
+                if tb or tp:
+                    take[g] = (tb, tp)
+                    db, dp = db - tb, dp - tp
+                if db <= 0 and dp <= 0:
+                    deficit.pop(g)
+                else:
+                    deficit[g] = [db, dp]
+            if take:
+                merged = dict(ex.pending_shrink or {})
+                for g, (tb, tp) in take.items():
+                    ob, op = merged.get(g, (0, 0))
+                    merged[g] = (ob + tb, op + tp)
+                ex.pending_shrink = merged
+
+    def _mark_preemption(self, task: Task,
+                         held: Mapping[str, tuple[int, int]] | None = None,
+                         ) -> None:
+        """Mark enough lower-priority running grants for reclamation that
+        ``task``'s full demand would fit (what can't be covered stays
+        unmarked — partial preemption is still progress under elastic
+        admission).  ``held`` is the task's own current grant when it is
+        already running on a partial one."""
+        held = held or {}
+        free = self.resources.free()
+        pending = self._pending_totals()
+        deficit: dict[str, list[int]] = {}
+        for g, (b, p) in task.demand().items():
+            hb, hp = held.get(g, (0, 0))
+            db = (b - hb - free.logical_bundles.get(g, 0)
+                  - pending.get(g, [0, 0])[0])
+            dp = (p - hp - free.physical_devices.get(g, 0)
+                  - pending.get(g, [0, 0])[1])
+            if db > 0 or dp > 0:
+                deficit[g] = [max(db, 0), max(dp, 0)]
+        if not deficit:
+            return
+        victims = sorted(
+            (ex for ex in self.executions.values()
+             if ex.state is TaskState.RUNNING
+             and ex.task.task_id != task.task_id
+             and ex.task.priority < task.priority),
+            key=lambda ex: (ex.task.priority, -ex.started_t, -ex.task.task_id))
+        self._mark_shrinks(deficit, victims)
+
+    def _reclaim_deficit(self) -> None:
+        """Mark shrinks that pay down a ``scale(reclaim=True)`` pool deficit
+        (negative free).  Victims in ascending priority order — capacity
+        loss is not a priority contest, but the cheapest tasks shed first."""
+        free = self.resources.free()
+        pending = self._pending_totals()
+        deficit: dict[str, list[int]] = {}
+        for pool, i in ((free.logical_bundles, 0), (free.physical_devices, 1)):
+            for g, v in pool.items():
+                short = -v - pending.get(g, [0, 0])[i]
+                if short > 0:
+                    deficit.setdefault(g, [0, 0])[i] = short
+        if not deficit:
+            return
+        victims = sorted(
+            (ex for ex in self.executions.values()
+             if ex.state is TaskState.RUNNING),
+            key=lambda ex: (ex.task.priority, -ex.started_t, -ex.task.task_id))
+        self._mark_shrinks(deficit, victims)
 
     def _rebalance(self) -> None:
         """Top running tasks' grants back up toward their full demand and
@@ -416,16 +702,32 @@ class TaskEngine:
         applies from the next round."""
         if not self.elastic:
             return
+        queued_prio = max((t.priority for t in self.queue.pending()),
+                          default=None)
         running = sorted(
             (ex for ex in self.executions.values()
              if ex.state is TaskState.RUNNING and not ex.full_grant),
             key=lambda ex: (-ex.task.priority, ex.task.task_id))
         for ex in running:
+            if ex.pending_shrink:
+                continue  # marked for reclamation; don't fight the preemption
+            if (self.preemptive and queued_prio is not None
+                    and queued_prio > ex.task.priority):
+                # A higher-priority task is waiting: freed resources belong
+                # to it, not to lower-priority top-ups (priority inversion).
+                continue
             free = self.resources.free()
             demand = ex.task.demand()
             upgraded = {
-                g: (min(rb, ex.grant[g][0] + free.logical_bundles.get(g, 0)),
-                    min(rp, ex.grant[g][1] + free.physical_devices.get(g, 0)))
+                # max(): with a reclaim deficit the free pool can be
+                # negative — top-ups never shrink a grant (that only happens
+                # at round boundaries via pending_shrink).
+                g: (max(ex.grant[g][0],
+                        min(rb, ex.grant[g][0]
+                            + free.logical_bundles.get(g, 0))),
+                    max(ex.grant[g][1],
+                        min(rp, ex.grant[g][1]
+                            + free.physical_devices.get(g, 0))))
                 for g, (rb, rp) in demand.items()
             }
             if upgraded == ex.grant:
@@ -435,6 +737,7 @@ class TaskEngine:
             except ValueError:
                 continue
             self.resources.refreeze(ex.task.task_id, upgraded)
+            self._accrue(ex)
             ex.grant = upgraded
             ex.allocation = allocation
             ex.reallocations += 1
@@ -445,6 +748,7 @@ class TaskEngine:
         self.clock.schedule(self.clock.now, self._pool_change_event)
 
     def _pool_change_event(self) -> None:
+        self._reclaim_deficit()
         self._rebalance()
         self._admit()
 
@@ -455,10 +759,67 @@ class TaskEngine:
         tid = ex.task.task_id
         self.clock.schedule(t, lambda: handler(tid, gen))
 
+    def _apply_shrink(self, ex: TaskExecution) -> None:
+        """Refreeze a victim's grant *down* at its round-event boundary.
+
+        The grant loses the marked reclamation; the remaining rounds are
+        re-solved (and re-timed, when sampling) on the shrunken
+        ``effective_grades``.  A grant clamped to zero — or one the
+        allocator can't solve (a grade lost both tiers while still owing
+        devices) — pauses the task back to the queue instead, progress kept.
+        """
+        shrink = ex.pending_shrink or {}
+        ex.pending_shrink = None
+        new_grant = {
+            g: (max(0, b - shrink.get(g, (0, 0))[0]),
+                max(0, p - shrink.get(g, (0, 0))[1]))
+            for g, (b, p) in ex.grant.items()
+        }
+        self._accrue(ex)
+        if not any(b or p for b, p in new_grant.values()):
+            self._pause(ex)
+            return
+        try:
+            allocation = self._solve(ex.task, new_grant)
+            self.resources.refreeze(ex.task.task_id, new_grant)
+        except ValueError:
+            # Infeasible shrink (or a pool deficit deeper than the marked
+            # reclamation): shed the whole grant instead of wedging.
+            self._pause(ex)
+            return
+        ex.grant = new_grant
+        ex.allocation = allocation
+        ex.reallocations += 1
+        ex.preemptions += 1
+
+    def _pause(self, ex: TaskExecution) -> None:
+        """Preempt ``ex`` entirely: release its resources and send the task
+        back to the queue.  ``rounds_done`` is kept — a resumed task picks
+        up where it was paused, it does not restart."""
+        self._accrue(ex)
+        self.resources.release(ex.task.task_id)
+        ex.state = TaskState.PAUSED
+        ex.paused_t = self.clock.now
+        ex.next_event_t = None
+        ex.generation += 1  # invalidate any scheduled round event
+        ex.preemptions += 1
+        self.queue.submit(ex.task)
+
     def _round_event(self, tid: int, gen: int) -> None:
         ex = self.executions.get(tid)
         if ex is None or ex.generation != gen or ex.state is not TaskState.RUNNING:
             return  # stale event (task rescheduled/failed meanwhile)
+        if ex.pending_shrink:
+            # Round-event boundary: apply the marked reclamation before the
+            # next round runs, then let the freed capacity admit/top-up the
+            # preemptor at this same timestamp.  Any deficit the shrink
+            # could not fully cover is re-marked on the remaining victims.
+            self._apply_shrink(ex)
+            self._reclaim_deficit()
+            self._rebalance()
+            self._admit()
+            if ex.state is not TaskState.RUNNING:
+                return  # paused to the queue; no round to run
         round_idx = ex.rounds_done
         t = self.clock.now
         duration = None
@@ -468,6 +829,7 @@ class TaskEngine:
             elif self.tier_runners is not None:
                 _run_tiers(self.tier_runners, ex.task, ex.allocation, round_idx)
         except Exception:
+            self._accrue(ex)
             ex.state = TaskState.FAILED
             ex.next_event_t = None
             self.resources.release(tid)
@@ -488,6 +850,7 @@ class TaskEngine:
         ex = self.executions.get(tid)
         if ex is None or ex.generation != gen or ex.state is not TaskState.RUNNING:
             return
+        self._accrue(ex)
         ex.state = TaskState.COMPLETED
         ex.finished_t = self.clock.now
         ex.next_event_t = None
@@ -496,7 +859,8 @@ class TaskEngine:
         if self.on_task_complete is not None:
             self.on_task_complete(ex)
         # Event boundary: freed resources may fit queued tasks or top up
-        # running elastic grants.
+        # running elastic grants (or settle a leftover reclaim deficit).
+        self._reclaim_deficit()
         self._rebalance()
         self._admit()
 
@@ -536,16 +900,39 @@ class TaskEngine:
                 "state": ex.state.value,
                 "rounds_done": ex.rounds_done,
                 "started_t": ex.started_t,
+                "submitted_t": ex.submitted_t,
                 "next_event_t": ex.next_event_t,
                 "finished_t": ex.finished_t,
                 "reallocations": ex.reallocations,
+                "preemptions": ex.preemptions,
+                "pending_shrink": (
+                    None if ex.pending_shrink is None
+                    else {g: list(bp) for g, bp in ex.pending_shrink.items()}),
+                "paused_t": ex.paused_t,
+                "queued_s": ex.queued_s,
+                "running_s": ex.running_s,
+                "grant_seconds": ex.grant_seconds,
+                "accrued_t": ex.accrued_t,
+                # The solved allocation is saved verbatim: restoring it
+                # (instead of re-solving) keeps a sampling engine's
+                # duration_rng stream aligned with the uninterrupted run.
+                "allocation": _encode_allocation(ex.allocation),
             }
 
-        return {
+        state = {
             "now": self.clock.now,
             "queue": [t.task_id for t in self.queue.pending()],
+            "submitted_t": {int(tid): t
+                            for tid, t in self._submitted_t.items()},
+            "arrivals": {int(tid): t
+                         for tid, (_, t) in self._pending_arrivals.items()},
             "executions": [enc(ex) for ex in self.executions.values()],
         }
+        if self.duration_rng is not None:
+            # PCG64-style state dicts are plain ints/strings — JSON-safe —
+            # so a restored engine draws the exact same sampled runtimes.
+            state["duration_rng"] = self.duration_rng.bit_generator.state
+        return state
 
     def load_state_dict(self, state: Mapping,
                         tasks: Iterable[Task]) -> None:
@@ -554,32 +941,58 @@ class TaskEngine:
         ``tasks`` supplies the Task objects referenced by the saved state
         (any iterable; matched by ``task_id``).  Requires a fresh engine on
         a fresh ``ResourceManager`` (grants are re-frozen here).  Pending
-        round events are rescheduled at their saved timestamps, so a
-        restored run continues on the exact same virtual timeline —
-        *provided the runtimes provider is restored too*: allocations are
-        re-solved here, so a ``RuntimeCalibrator`` must have its
-        observations reloaded first (``RuntimeCalibrator.load_state_dict``)
-        and a ``duration_rng`` engine's sampled event times are not
-        reproducible across a restore (the generator state is not saved).
+        round events are rescheduled at their saved timestamps and each
+        execution's solved allocation is restored *verbatim* (legacy states
+        without one are re-solved), so a restored run continues on the
+        exact same virtual timeline — a ``RuntimeCalibrator`` runtimes
+        provider must still have its observations reloaded first
+        (``RuntimeCalibrator.load_state_dict``), and a ``duration_rng``
+        engine additionally restores the saved generator state so resumed
+        sampled event times match the uninterrupted run draw for draw.
+        PAUSED (preempted) executions restore un-frozen and un-scheduled;
+        they sit in the restored queue and resume at the next event
+        boundary that fits them, exactly like the live engine.
         """
         by_id = {t.task_id: t for t in tasks}
         self.clock.now = float(state["now"])
+        if self.duration_rng is not None and "duration_rng" in state:
+            self.duration_rng.bit_generator.state = state["duration_rng"]
         for tid in state["queue"]:
             self.queue.submit(by_id[int(tid)])
+        for tid, t in state.get("submitted_t", {}).items():
+            self._submitted_t[int(tid)] = float(t)
+        for tid, t in state.get("arrivals", {}).items():
+            # Re-schedule deferred arrivals saved before they fired.
+            self.submit(by_id[int(tid)], at=float(t))
         for enc in state["executions"]:
             tid = int(enc["task_id"])
             task = by_id[tid]
             grant = {g: (int(bp[0]), int(bp[1]))
                      for g, bp in enc["grant"].items()}
+            pending = enc.get("pending_shrink")
             ex = TaskExecution(
                 task=task, grant=grant,
-                allocation=self._solve(task, grant),
+                allocation=(_decode_allocation(enc["allocation"])
+                            if enc.get("allocation") is not None
+                            else self._solve(task, grant)),
                 state=TaskState(enc["state"]),
                 rounds_done=int(enc["rounds_done"]),
                 started_t=float(enc["started_t"]),
+                submitted_t=float(enc.get("submitted_t", enc["started_t"])),
                 finished_t=(None if enc["finished_t"] is None
                             else float(enc["finished_t"])),
                 reallocations=int(enc["reallocations"]),
+                preemptions=int(enc.get("preemptions", 0)),
+                pending_shrink=(
+                    None if pending is None
+                    else {g: (int(bp[0]), int(bp[1]))
+                          for g, bp in pending.items()}),
+                paused_t=(None if enc.get("paused_t") is None
+                          else float(enc["paused_t"])),
+                queued_s=float(enc.get("queued_s", 0.0)),
+                running_s=float(enc.get("running_s", 0.0)),
+                grant_seconds=float(enc.get("grant_seconds", 0.0)),
+                accrued_t=float(enc.get("accrued_t", self.clock.now)),
             )
             self.executions[tid] = ex
             if ex.state is TaskState.RUNNING:

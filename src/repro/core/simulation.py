@@ -694,6 +694,12 @@ class HybridSimulation:
         grades) and the per-grade makespan breakdown.  ``calibrator``
         (a ``calibration.RuntimeCalibrator``) observes every grade's sample,
         closing the measurement loop back into ``solve_allocation``.
+
+        The plan may change between rounds of one task: an elastic or
+        preemptive ``TaskEngine`` re-solves the allocation mid-task (grant
+        top-ups and refreeze-downs), which moves devices between tiers but
+        never changes a grade's total — batches stay shaped ``(N_i, ...)``
+        across every re-plan.
         """
         # Validate the whole plan up front: a failure mid-plan would leave
         # earlier grades' tiers, rng, and the calibrator polluted with a

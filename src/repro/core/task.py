@@ -145,17 +145,30 @@ class Task:
 
 
 class TaskQueue:
-    """FIFO-with-priority queue of submitted tasks (paper: *Task Queue*)."""
+    """FIFO-with-priority queue of submitted tasks (paper: *Task Queue*).
+
+    Preempted (paused) tasks re-enter through the same ``submit`` path: they
+    keep their original ``task_id``, so ``pending`` ranks a resumed task
+    exactly where its priority and submission order put it the first time —
+    a pause changes *when* a task runs, never its place in line.
+    """
 
     def __init__(self) -> None:
         self._tasks: list[Task] = []
 
     def submit(self, task: Task) -> int:
+        if task.task_id in self:
+            # A duplicate would double-admit and double-freeze resources
+            # (e.g. pausing a task that was never removed from the queue).
+            raise ValueError(f"task {task.task_id} already queued")
         self._tasks.append(task)
         return task.task_id
 
     def __len__(self) -> int:
         return len(self._tasks)
+
+    def __contains__(self, task_id: int) -> bool:
+        return any(t.task_id == task_id for t in self._tasks)
 
     def pending(self) -> Sequence[Task]:
         # Stable order: priority desc, then submission order (task_id asc).

@@ -274,8 +274,17 @@ def multi_task_federated(args) -> dict:
     spec = GradeSpec("High", n_clients, logical_bundles=max(1, n_clients // 2),
                      bundles_per_device=1,
                      physical_devices=max(1, n_clients // 4))
+    # --priorities "5,1,1" pins per-task scheduling priorities (cycled to
+    # --tasks length); default keeps the earlier-submitted-is-more-urgent
+    # ordering.  With --preemptive, a later high-priority arrival reclaims
+    # lower-priority grants at their round boundaries instead of waiting.
+    if args.priorities:
+        prios = [int(p) for p in args.priorities.split(",") if p.strip()]
+        priorities = [prios[i % len(prios)] for i in range(args.tasks)]
+    else:
+        priorities = [args.tasks - i for i in range(args.tasks)]
     tasks = [Task(OperatorFlow(("train",)), (spec,), rounds=args.rounds,
-                  priority=args.tasks - i) for i in range(args.tasks)]
+                  priority=priorities[i]) for i in range(args.tasks)]
     # Pool fits about half the fleet at full demand (plus a spare bundle for
     # elastic partial grants): later tasks run on what is free and rebalance
     # up as earlier ones finish.
@@ -319,24 +328,35 @@ def multi_task_federated(args) -> dict:
         return outcome.makespan_s  # measured duration times the next event
 
     engine = TaskEngine(rm, cal, round_runner=round_runner,
-                        clock=flow.clock, elastic=True)
-    for task in tasks:
-        engine.submit(task)
+                        clock=flow.clock, elastic=True,
+                        preemptive=args.preemptive)
     t0 = time.perf_counter()
+    for i, task in enumerate(tasks):
+        # Staggered arrivals (--arrival-gap) make priority meaningful: a
+        # high-priority task arriving late must preempt, not just sort first.
+        engine.submit(task, at=i * args.arrival_gap or None)
     result = engine.drain()
     wall_s = time.perf_counter() - t0
     serial_est = measured_total[0]  # back-to-back = sum of round durations
     for ex in result:
-        print(f"task {ex.task.task_id}: rounds={ex.rounds_done} "
+        print(f"task {ex.task.task_id}: prio={ex.task.priority} "
+              f"rounds={ex.rounds_done} "
               f"start={ex.started_t:.0f}s finish={ex.finished_t:.0f}s "
+              f"queue-delay={ex.queueing_delay_s:.0f}s "
+              f"grant-util={ex.grant_utilization:.2f} "
               f"reallocations={ex.reallocations} "
+              f"preemptions={ex.preemptions} "
               f"aggregations={len(router.services[ex.task.task_id].history)}",
               flush=True)
     print(f"interleaved makespan {engine.makespan:.0f}s vs serial estimate "
           f"{serial_est:.0f}s ({serial_est / max(engine.makespan, 1e-9):.2f}x)"
           f"; stranded={len(result.stranded)}; wall {wall_s:.1f}s", flush=True)
+    top_prio = max(priorities)
+    hi_delays = [ex.queueing_delay_s for ex in result
+                 if ex.task.priority == top_prio]
     return {"makespan_s": engine.makespan, "serial_estimate_s": serial_est,
-            "completed": len(result), "stranded": len(result.stranded)}
+            "completed": len(result), "stranded": len(result.stranded),
+            "top_priority_queueing_delay_s": max(hi_delays, default=0.0)}
 
 
 def main(argv=None):
@@ -351,6 +371,15 @@ def main(argv=None):
     ap.add_argument("--tasks", type=int, default=1,
                     help="number of contending federated tasks; >1 runs the "
                          "event-driven multi-task engine on one shared pool")
+    ap.add_argument("--priorities", default="",
+                    help="comma-separated per-task scheduling priorities "
+                         "(cycled to --tasks), e.g. '5,1,1'")
+    ap.add_argument("--preemptive", action="store_true",
+                    help="let higher-priority tasks refreeze lower-priority "
+                         "grants down at round boundaries")
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    help="virtual seconds between successive task arrivals "
+                         "(task i submits at i*gap)")
     ap.add_argument("--clients-per-round", type=int, default=8)
     ap.add_argument("--grades", default="High",
                     help="comma-separated device grades, e.g. High,Low")

@@ -100,6 +100,34 @@ def test_independent_tasks_do_not_interfere():
     assert len(got) == 6
 
 
+def test_created_t_stamping_sentinel():
+    """Unstamped messages (created_t=None) are stamped at submit time; a
+    producer-stamped ``created_t`` is preserved verbatim — including 0.0,
+    which the old ``== 0.0`` sentinel silently re-stamped at t>0, corrupting
+    latency accounting."""
+    got, sink = collect()
+    flow = DeviceFlow(sink)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    flow.clock.now = 5.0
+    flow.submit(Message(0, 0, 0, payload="unstamped"))
+    assert got[-1].message.created_t == 5.0
+    flow.submit(Message(0, 1, 0, payload="stamped-at-zero", created_t=0.0))
+    assert got[-1].message.created_t == 0.0  # producer stamp survives t>0
+    # Bulk path: same contract, arrival times stamp only unstamped messages.
+    flow.submit_many(
+        [Message(0, 2, 0, payload="bulk-unstamped"),
+         Message(0, 3, 0, payload="bulk-stamped", created_t=0.0)],
+        ts=[7.0, 8.0])
+    by_dev = {d.message.device_id: d.message for d in got}
+    assert by_dev[2].created_t == 7.0
+    assert by_dev[3].created_t == 0.0
+    # Submitting at t=0 stamps an explicit 0.0 (no longer "unstamped").
+    flow2 = DeviceFlow(sink)
+    flow2.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    flow2.submit(Message(0, 4, 0, payload="at-zero"))
+    assert got[-1].message.created_t == 0.0
+
+
 def test_shelf_checkpoint_roundtrip():
     got, sink = collect()
     flow = DeviceFlow(sink)

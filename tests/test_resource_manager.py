@@ -1,0 +1,153 @@
+"""ResourceManager pool-accounting invariants (property-based).
+
+The hybrid pool is mutated from many directions — admission freezes,
+completion releases, elastic refreezes (up *and* down), and dynamic
+``scale`` in all four flavors (grow, shrink, rejected shrink, reclaim
+shrink).  The invariant that keeps every one of them honest is
+
+    free + frozen == total        (per grade, per resource field)
+
+including after *failed* operations: a rejected freeze/refreeze/scale must
+leave the pool exactly as it found it (the PR 5 satellite fixed ``scale``
+mutating ``logical_bundles`` before validating ``physical_devices``, and
+``refreeze`` releasing before discovering the new grant didn't fit).
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import ResourceManager, ResourcePool
+
+GRADES = ("High", "Mid", "Low")
+
+
+def _snapshot(rm: ResourceManager):
+    free, total = rm.free(), rm.total()
+    return ({g: free.logical_bundles.get(g, 0) for g in GRADES},
+            {g: free.physical_devices.get(g, 0) for g in GRADES},
+            {g: total.logical_bundles.get(g, 0) for g in GRADES},
+            {g: total.physical_devices.get(g, 0) for g in GRADES})
+
+
+def _check_invariant(rm: ResourceManager, frozen_by_task: dict):
+    free_b, free_p, tot_b, tot_p = _snapshot(rm)
+    for g in GRADES:
+        frozen_b = sum(d.get(g, (0, 0))[0] for d in frozen_by_task.values())
+        frozen_p = sum(d.get(g, (0, 0))[1] for d in frozen_by_task.values())
+        assert free_b[g] + frozen_b == tot_b[g], (g, "bundles")
+        assert free_p[g] + frozen_p == tot_p[g], (g, "phones")
+        assert tot_b[g] >= 0 and tot_p[g] >= 0
+        # Only a reclaim shrink may leave free negative; the deficit
+        # accessor must agree with it.
+        db, dp = rm.deficit(g)
+        assert db == max(0, -free_b[g]) and dp == max(0, -free_p[g])
+
+
+# One random operation: (kind, task_id, grade, amounts...).
+_OP = st.tuples(
+    st.sampled_from(("freeze", "release", "refreeze", "scale", "reclaim")),
+    st.integers(0, 4),  # task id
+    st.sampled_from(GRADES),
+    st.integers(0, 6),  # bundles / |bundles_delta|
+    st.integers(0, 3),  # phones / |phones_delta|
+    st.integers(0, 1),  # sign bit for scale deltas (0 = grow, 1 = shrink)
+)
+
+
+@settings(max_examples=120, deadline=None)
+@given(ops=st.lists(_OP, min_size=1, max_size=40))
+def test_pool_invariant_across_random_op_sequences(ops):
+    rm = ResourceManager(ResourcePool(
+        {g: 8 for g in GRADES}, {g: 4 for g in GRADES}))
+    frozen_by_task: dict[int, dict] = {}  # shadow model of rm._frozen
+    for kind, tid, grade, b, p, sign in ops:
+        before = _snapshot(rm)
+        try:
+            if kind == "freeze":
+                if tid in frozen_by_task:  # model: one grant per task
+                    continue
+                rm.freeze(tid, {grade: (b, p)})
+                frozen_by_task[tid] = {grade: (b, p)}
+            elif kind == "release":
+                rm.release(tid)
+                frozen_by_task.pop(tid, None)
+            elif kind == "refreeze":
+                rm.refreeze(tid, {grade: (b, p)})
+                frozen_by_task[tid] = {grade: (b, p)}
+            elif kind == "scale":
+                rm.scale(grade, bundles_delta=-b if sign else b,
+                         phones_delta=-p if sign else p)
+            else:  # reclaim shrink: may drive free negative, never total
+                rm.scale(grade, bundles_delta=-b, phones_delta=-p,
+                         reclaim=True)
+        except (ValueError, KeyError):
+            # Failure path: the pool must be untouched (atomicity).
+            assert _snapshot(rm) == before
+        _check_invariant(rm, frozen_by_task)
+        # frozen() view matches the shadow model for every known task.
+        for t, d in frozen_by_task.items():
+            assert rm.frozen(t) == d
+
+
+def test_rejected_shrink_leaves_both_pools_consistent():
+    """Regression: ``scale`` used to mutate logical_bundles, then raise on
+    physical_devices, leaving free/total inconsistent."""
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 4}))
+    rm.freeze(0, {"High": (0, 4)})  # all phones frozen, bundles free
+    with pytest.raises(ValueError, match="physical_devices"):
+        rm.scale("High", bundles_delta=-2, phones_delta=-1)
+    free, total = rm.free(), rm.total()
+    assert free.logical_bundles["High"] == 8  # NOT 6: first field untouched
+    assert total.logical_bundles["High"] == 8
+    assert free.physical_devices["High"] == 0
+    assert total.physical_devices["High"] == 4
+
+
+def test_zero_delta_scale_fires_no_listeners():
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 4}))
+    fired = []
+    rm.subscribe(lambda: fired.append(1))
+    rm.scale("High")  # no-op: both deltas zero
+    assert fired == []
+    rm.scale("High", bundles_delta=1)
+    assert fired == [1]
+
+
+def test_refreeze_failure_does_not_release_the_old_grant():
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 4}))
+    rm.freeze(0, {"High": (8, 2)})
+    with pytest.raises(ValueError):
+        rm.refreeze(0, {"High": (8, 5)})  # 5 phones never fit (4 total)
+    assert rm.frozen(0) == {"High": (8, 2)}
+    assert rm.free().logical_bundles["High"] == 0  # still frozen, not leaked
+
+
+def test_refreeze_grows_one_component_despite_unrelated_deficit():
+    """Paying down (or leaving alone) a deficit component must not block
+    growing a different component: validation is per-component and only on
+    the growing side."""
+    rm = ResourceManager(ResourcePool({"High": 4}, {"High": 6}))
+    rm.freeze(0, {"High": (4, 0)})
+    rm.freeze(1, {"High": (0, 4)})
+    rm.scale("High", bundles_delta=-2, reclaim=True)  # free: (-2, 2)
+    rm.refreeze(1, {"High": (0, 6)})  # phones grow 4->6; bundles untouched
+    assert rm.frozen(1) == {"High": (0, 6)}
+    assert rm.free().physical_devices["High"] == 0
+    assert rm.deficit("High") == (2, 0)  # untouched by the phone grow
+    # Shrinking the deficit component is always legal, even mid-deficit.
+    rm.refreeze(0, {"High": (2, 0)})
+    assert rm.deficit("High") == (0, 0)
+
+
+def test_reclaim_shrink_tracks_deficit_until_paid_down():
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 4}))
+    rm.freeze(0, {"High": (8, 4)})
+    rm.scale("High", bundles_delta=-4, reclaim=True)
+    assert rm.deficit("High") == (4, 0)
+    assert rm.total().logical_bundles["High"] == 4
+    # Shrinking the frozen grant by the deficit settles the pool.
+    rm.refreeze(0, {"High": (4, 4)})
+    assert rm.deficit("High") == (0, 0)
+    assert rm.free().logical_bundles["High"] == 0
+    # Even reclaim cannot remove more than the total capacity.
+    with pytest.raises(ValueError, match="total"):
+        rm.scale("High", phones_delta=-5, reclaim=True)

@@ -1,5 +1,6 @@
 """Event-driven multi-task engine: interleaving, admission, elastic
-re-allocation, stranded-drain reporting, and mid-task checkpoint restore."""
+re-allocation, preemptive priority scheduling, stranded-drain reporting,
+and mid-task / mid-preemption checkpoint restore."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -155,6 +156,171 @@ def test_drain_reports_stranded_tasks_and_strict_raises():
     assert len(out2) == 1 and not out2.stranded and out2.stranded_reason is None
 
 
+# --------------------------------------------------------------------------- #
+# Preemptive priority scheduling (PR 5)
+# --------------------------------------------------------------------------- #
+def test_preemptive_arrival_pauses_victim_at_round_boundary():
+    """A high-priority arrival reclaims a lower-priority task's whole grant
+    at that task's next round-event boundary: the victim is PAUSED back to
+    the queue (progress kept), the preemptor runs, the victim resumes when
+    the pool frees up.  The non-preemptive engine makes the arrival wait
+    for a full task completion instead."""
+
+    def run(preemptive):
+        rm = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+        eng = TaskEngine(rm, RTS, preemptive=preemptive)
+        a, b = make_task(rounds=3), make_task(rounds=3)
+        hi = make_task(rounds=2, priority=5)
+        eng.submit(a)
+        eng.submit(b)
+        eng.submit(hi, at=1.0)  # arrives mid-round-0 of a and b
+        res = eng.drain()
+        assert len(res) == 3 and not res.stranded
+        return eng, a, b, hi
+
+    eng, a, b, hi = run(preemptive=True)
+    ex_hi = eng.executions[hi.task_id]
+    victim = eng.executions[b.task_id]  # newest-started lowest-pri sheds first
+    # The victim paused exactly once, at its round-0 boundary (t=10 for the
+    # 8-bundle/2-phone allocation under RTS), and the preemptor started there.
+    assert victim.preemptions == 1 and victim.rounds_done == 3
+    assert ex_hi.started_t == pytest.approx(10.0)
+    assert ex_hi.queueing_delay_s == pytest.approx(9.0)
+    assert victim.queueing_delay_s > 0  # the pause is charged to the victim
+    assert victim.finished_t > ex_hi.finished_t
+    assert victim.grant_utilization == pytest.approx(1.0)  # full grant or none
+
+    eng2, a2, b2, hi2 = run(preemptive=False)
+    ex_hi2 = eng2.executions[hi2.task_id]
+    assert ex_hi2.queueing_delay_s == pytest.approx(29.0)  # waits a full task
+    assert eng2.executions[b2.task_id].preemptions == 0
+    assert ex_hi2.queueing_delay_s >= 2.0 * ex_hi.queueing_delay_s
+
+
+def test_preemptive_partial_shrink_keeps_victim_running():
+    """A preemptor needing only part of a victim's grant shrinks it
+    (refreeze-down + re-solved allocation) instead of pausing it."""
+    rm = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+    eng = TaskEngine(rm, RTS, preemptive=True)
+    a, b = make_task(rounds=3), make_task(rounds=3)
+    hi = make_task(rounds=1, priority=5, bundles=4, phones=0)
+    eng.submit(a)
+    eng.submit(b)
+    eng.submit(hi, at=1.0)
+    res = eng.drain()
+    assert len(res) == 3 and not res.stranded
+    victim = eng.executions[b.task_id]
+    assert victim.state is TaskState.COMPLETED
+    assert victim.preemptions == 1
+    assert victim.rounds_done == 3  # never paused, kept running while shrunk
+    assert victim.queued_s == pytest.approx(0.0)
+    assert victim.grant_utilization < 1.0  # ran part of the time on (4, 2)
+    assert eng.executions[hi.task_id].started_t == pytest.approx(10.0)
+
+
+def test_equal_priority_never_preempts():
+    rm = ResourceManager(ResourcePool({"High": 8}, {"High": 2}))
+    eng = TaskEngine(rm, RTS, preemptive=True, elastic=False)
+    a = make_task(rounds=2, priority=3)
+    late = make_task(rounds=1, priority=3)
+    eng.submit(a)
+    eng.submit(late, at=1.0)
+    eng.drain()
+    assert eng.executions[a.task_id].preemptions == 0
+    assert eng.executions[late.task_id].started_t == pytest.approx(
+        eng.executions[a.task_id].finished_t)
+
+
+def test_scale_reclaim_shrinks_running_grants_at_round_boundary():
+    """``scale(reclaim=True)`` may remove frozen capacity: the free pool
+    goes into deficit and the engine pays it down by refreezing running
+    grants down (ascending priority first) at their round boundaries —
+    the paper's "dynamic scaling down" with a fully-frozen pool."""
+    rm = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+    eng = TaskEngine(rm, RTS)
+    keep, shed = make_task(rounds=2, priority=1), make_task(rounds=2)
+    eng.submit(keep)
+    eng.submit(shed)
+    eng.clock.schedule(
+        1.0, lambda: rm.scale("High", bundles_delta=-8, phones_delta=-2,
+                              reclaim=True))
+    eng.run_until()
+    assert eng.executions[keep.task_id].preemptions == 0
+    assert eng.executions[shed.task_id].preemptions >= 1  # paid the deficit
+    assert eng.executions[shed.task_id].state is TaskState.COMPLETED
+    free = rm.free()
+    assert free.logical_bundles["High"] == 8 and rm.deficit("High") == (0, 0)
+    # The un-reclaimed path still refuses to take frozen resources.
+    rm2 = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+    eng2 = TaskEngine(rm2, RTS)
+    eng2.submit(make_task(rounds=1, bundles=16, phones=4))
+    eng2.clock.schedule(1.0, lambda: rm2.scale("High", bundles_delta=-8))
+    with pytest.raises(ValueError, match="only"):
+        eng2.run_until()
+
+
+def test_elastic_grant_never_goes_negative_under_deficit():
+    """A reclaim deficit makes free components negative; the elastic clamp
+    must floor grants at zero — a negative component would silently absorb
+    the deficit and oversubscribe the pool."""
+    rm = ResourceManager(ResourcePool({"High": 3}, {"High": 4}))
+    eng = TaskEngine(rm, RTS)
+    a = make_task(rounds=2, bundles=3, phones=2)
+    eng.submit(a)
+    eng.clock.schedule(
+        1.0, lambda: rm.scale("High", bundles_delta=-2, reclaim=True))
+    b = make_task(rounds=1, bundles=4, phones=4)
+    eng.submit(b, at=2.0)  # free is (-2, 2) when b arrives
+    eng.clock.run_until(5.0)
+    ex_b = eng.executions.get(b.task_id)
+    assert ex_b is not None and ex_b.grant == {"High": (0, 2)}  # not (-2, 2)
+    assert eng._grant_frac(ex_b) > 0
+    eng.run_until()
+    assert all(ex.state is TaskState.COMPLETED
+               for ex in eng.executions.values())
+    assert rm.deficit("High") == (0, 0)
+
+
+def test_deferred_arrival_survives_checkpoint():
+    """``submit(task, at=...)`` before the arrival fires must round-trip
+    through state_dict — clock callbacks don't survive a checkpoint, so
+    pending arrivals are serialized and re-scheduled on load."""
+
+    def build():
+        rm = ResourceManager(ResourcePool({"High": 8}, {"High": 2}))
+        return TaskEngine(rm, RTS, preemptive=True)
+
+    def tasks_pair():
+        return make_task(rounds=3), make_task(rounds=1, priority=5)
+
+    # Reference: uninterrupted run.
+    a, hi = tasks_pair()
+    eng = build()
+    eng.submit(a)
+    eng.submit(hi, at=15.0)  # mid round 1 of a
+    eng.drain()
+    ref = {t.task_id: eng.executions[t.task_id].finished_t for t in (a, hi)}
+
+    # Interrupted before the arrival fires.
+    a1, hi1 = tasks_pair()
+    eng1 = build()
+    eng1.submit(a1)
+    eng1.submit(hi1, at=15.0)
+    assert eng1.clock.run_one()  # t=0 admission only; arrival still pending
+    assert eng1.clock.now < 15.0
+    state = eng1.state_dict()
+    assert state["arrivals"]  # the deferred arrival is in the snapshot
+
+    eng2 = build()
+    eng2.load_state_dict(state, tasks=[a1, hi1])
+    eng2.drain()
+    assert eng2.executions[hi1.task_id].started_t == pytest.approx(
+        eng.executions[hi.task_id].started_t)
+    for t_ref, t_new in zip((a, hi), (a1, hi1)):
+        assert eng2.executions[t_new.task_id].finished_t == pytest.approx(
+            ref[t_ref.task_id])
+
+
 def test_engine_failed_round_releases_resources():
     rm = ResourceManager(ResourcePool({"High": 8}, {"High": 2}))
 
@@ -284,3 +450,101 @@ def test_engine_checkpoint_roundtrip_mid_task(tmp_path):
             blocked1.task_id: got_finished[blocked1.task_id]} \
         == pytest.approx({task1.task_id: ref_finished[task.task_id],
                           blocked1.task_id: ref_finished[blocked.task_id]})
+
+
+def test_engine_checkpoint_roundtrip_mid_preemption(tmp_path):
+    """A ``TaskEngine`` snapshotted *mid-preemption* — one victim already
+    paused with the preemptor admitted, the other victim still carrying an
+    unapplied ``pending_shrink`` — restores to the identical timeline.
+
+    The engine samples round durations (``RuntimeCalibrator`` observations
+    + ``duration_rng``), so this exercises the whole restore contract:
+    solved allocations are saved verbatim and the rng's generator state is
+    saved/restored, which keeps every post-restore draw aligned with the
+    uninterrupted run."""
+    from repro.core.calibration import RuntimeCalibrator
+    from repro.core.devicemodel import DeviceFleet
+
+    cal = RuntimeCalibrator()
+    probe = DeviceFleet(GRADES["High"], 32, seed=11)
+    for r in range(4):
+        cal.observe_fleet(probe.run_round(r))
+
+    def fresh_engine():
+        rm = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+        return rm, TaskEngine(rm, cal, preemptive=True,
+                              duration_rng=np.random.default_rng(77))
+
+    def make_tasks():
+        a, b = make_task(rounds=3), make_task(rounds=3)
+        # hi's full demand (12, 2) needs BOTH victims' bundles: one victim
+        # pauses outright, the other is left holding a pending shrink.
+        hi = make_task(rounds=2, priority=5, bundles=12, phones=2)
+        return a, b, hi
+
+    def run_all(eng, tasks, arrival):
+        a, b, hi = tasks
+        eng.submit(a)
+        eng.submit(b)
+        eng.submit(hi, at=arrival)
+        res = eng.drain()
+        assert len(res) == 3 and not res.stranded
+        return {ex.task.task_id:
+                (ex.finished_t, ex.queueing_delay_s, ex.rounds_done)
+                for ex in eng.completed}
+
+    # --- uninterrupted reference run -----------------------------------
+    tasks = make_tasks()
+    _, eng = fresh_engine()
+    ref = run_all(eng, tasks, arrival=1.0)
+    ref_makespan = eng.makespan
+    assert any(ex.preemptions for ex in eng.completed)  # preemption happened
+
+    # --- interrupted run: snapshot in the middle of the preemption ------
+    tasks1 = make_tasks()
+    a1, b1, hi1 = tasks1
+    rm1, eng1 = fresh_engine()
+    eng1.submit(a1)
+    eng1.submit(b1)
+    eng1.submit(hi1, at=1.0)
+    # Step until mid-preemption: the preemptor admitted AND a victim paused.
+    def mid_preemption():
+        ex_hi = eng1.executions.get(hi1.task_id)
+        return (ex_hi is not None and ex_hi.state is TaskState.RUNNING
+                and any(e.state is TaskState.PAUSED
+                        for e in eng1.executions.values()))
+
+    while not mid_preemption():
+        assert eng1.clock.run_one()
+    paused = [ex for ex in eng1.executions.values()
+              if ex.state is TaskState.PAUSED]
+    assert rm1.frozen(hi1.task_id) is not None  # preemptor holds its grant
+
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"sentinel": np.zeros(1)},
+            extra={"engine": eng1.state_dict(),
+                   "calibrator": cal.state_dict()})
+
+    # --- restore into a fresh world and resume --------------------------
+    cal2 = RuntimeCalibrator()
+    rm2 = ResourceManager(ResourcePool({"High": 16}, {"High": 4}))
+    eng2 = TaskEngine(rm2, cal2, preemptive=True,
+                      duration_rng=np.random.default_rng(0))  # overwritten
+    _, extra = ck.restore({"sentinel": np.zeros(1)})
+    cal2.load_state_dict(extra["calibrator"])
+    eng2.load_state_dict(extra["engine"], tasks=tasks1)
+    # Mid-preemption facts survive the round-trip.
+    assert eng2.executions[paused[0].task.task_id].state is TaskState.PAUSED
+    assert rm2.frozen(hi1.task_id) == rm1.frozen(hi1.task_id)
+    assert len(eng2.queue) == len(eng1.queue)
+    eng2.run_until()
+    got = {ex.task.task_id:
+           (ex.finished_t, ex.queueing_delay_s, ex.rounds_done)
+           for ex in eng2.completed}
+    for t_ref, t_new in zip(tasks, tasks1):
+        f_ref, q_ref, r_ref = ref[t_ref.task_id]
+        f_got, q_got, r_got = got[t_new.task_id]
+        assert f_got == pytest.approx(f_ref)
+        assert q_got == pytest.approx(q_ref)
+        assert r_got == r_ref
+    assert eng2.makespan == pytest.approx(ref_makespan)
