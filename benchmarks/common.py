@@ -26,19 +26,55 @@ class Row:
     derived: str
 
     def csv(self) -> str:
-        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+        # TimedStat means carry their own spread; surface it so CSV/JSON
+        # consumers can tell a tight mean from a noisy one.
+        extra = (f";pstd={self.us_per_call.pstd:.1f}"
+                 if isinstance(self.us_per_call, TimedStat)
+                 and self.us_per_call.iters > 1 else "")
+        return f"{self.name},{float(self.us_per_call):.1f},{self.derived}{extra}"
 
 
-def timed(fn: Callable, *args, repeats: int = 1, **kwargs):
-    t0 = time.perf_counter()
+class TimedStat(float):
+    """Mean microseconds per call, float-compatible everywhere a plain
+    timing was used, with the spread riding along: ``pstd`` is the standard
+    deviation as a percentage of the mean, ``iters`` the number of timed
+    iterations it was computed over."""
+
+    __slots__ = ("pstd", "iters")
+
+    def __new__(cls, times_s) -> "TimedStat":
+        arr = np.asarray(times_s, dtype=float)
+        mean = float(arr.mean())
+        self = float.__new__(cls, mean * 1e6)
+        self.pstd = float(100.0 * arr.std() / mean) if mean > 0 else 0.0
+        self.iters = int(arr.size)
+        return self
+
+
+def timed(fn: Callable, *args, repeats: int = 1, warmup: int = 0,
+          target_total_secs: float | None = None, **kwargs):
+    """Time ``fn(*args, **kwargs)``; returns ``(last_output, TimedStat)``.
+
+    ``warmup`` iterations run untimed first, so jit compilation and cache
+    population don't pollute the mean.  After at least ``repeats`` timed
+    iterations, iteration continues until ``target_total_secs`` of timed
+    wall-clock has accumulated (when given) — a %std computed over a
+    handful of samples is mostly noise.
+    """
     out = None
-    for _ in range(repeats):
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args, **kwargs))
+    times: list[float] = []
+    while (len(times) < repeats
+           or (target_total_secs is not None
+               and sum(times) < target_total_secs)):
+        t0 = time.perf_counter()
         # JAX dispatch is async: block on returned arrays (pytrees pass
         # through; non-array leaves are untouched) so device-side timings
         # report compute cost, not dispatch cost.
         out = jax.block_until_ready(fn(*args, **kwargs))
-    dt = (time.perf_counter() - t0) / repeats
-    return out, dt * 1e6  # us
+        times.append(time.perf_counter() - t0)
+    return out, TimedStat(times)
 
 
 def run_federated_ctr(

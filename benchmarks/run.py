@@ -31,14 +31,15 @@ from benchmarks import common  # noqa: E402
 from benchmarks.paper_benchmarks import ALL_BENCHMARKS  # noqa: E402
 
 QUICK_BENCHMARKS = ("fig8_device_tier_batched", "multi_grade_round",
-                    "round_pipeline", "multi_task_schedule",
-                    "multi_task_preemption")
+                    "round_pipeline", "million_device_round",
+                    "multi_task_schedule", "multi_task_preemption")
 
 # Throughput-ish metrics worth tracking across PRs (higher is better except
 # slowdown/makespan_s/queueing_delay_s; the diff just reports the ratio
 # either way).
-DIFF_METRICS = ("devices_per_s", "speedup", "slowdown", "per_device_us",
-                "makespan_s", "queueing_delay_s")
+DIFF_METRICS = ("devices_per_s", "device_messages_per_s", "speedup",
+                "slowdown", "per_device_us", "makespan_s",
+                "queueing_delay_s")
 
 
 def parse_derived(derived: str) -> dict:
@@ -110,9 +111,15 @@ def main(argv=None) -> int:
         try:
             for row in bench():
                 print(row.csv(), flush=True)
-                collected.append({"name": row.name,
-                                  "us_per_call": row.us_per_call,
-                                  "derived": row.derived})
+                rec = {"name": row.name,
+                       "us_per_call": float(row.us_per_call),
+                       "derived": row.derived}
+                if isinstance(row.us_per_call, common.TimedStat):
+                    # %std + iteration count ride into the artifact so a
+                    # diff reader can weigh noisy means appropriately.
+                    rec["pstd"] = row.us_per_call.pstd
+                    rec["iters"] = row.us_per_call.iters
+                collected.append(rec)
                 if args.quick and "ok=False" in row.derived:
                     failures += 1
         except Exception as e:  # keep the harness running

@@ -9,12 +9,21 @@ commit protocol, and restore path are the multi-host ones.
 Federated-platform integration: the DeviceFlow shelf state and data-pipeline
 RNG state ride in the manifest's ``extra`` field, so a restart resumes
 mid-round without message loss or duplication (exactly-once per message).
+JSON can't carry live runtime objects, though — mid-round engine snapshots
+(``TaskEngine.state_dict(deviceflow=...)``) hold shelved ``Message``s and
+columnar ``ArrivalBatch`` segments.  Those ride in the step directory's
+``runtime.pkl`` instead (``save(..., runtime_state=...)`` /
+``restore_runtime_state``), with every device reference — handle payloads,
+batch update buffers — materialized to host arrays first, so the pickle
+never contains live device memory.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import pathlib
+import pickle
 import shutil
 import tempfile
 import threading
@@ -24,7 +33,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-from repro.core.updates import materialize_handles
+from repro.core.updates import UpdateBuffer, UpdateHandle, materialize_handles
 
 
 def _jsonify(obj: Any) -> Any:
@@ -54,6 +63,32 @@ def _jsonify(obj: Any) -> Any:
         f"— Tasks, device buffers — are re-supplied on restore, not saved)")
 
 
+def _host_runtime_view(obj: Any) -> Any:
+    """Recursively replace device references in a runtime-state snapshot with
+    host data, so ``runtime.pkl`` pickles cleanly and holds no live buffers.
+
+    Handles the shapes engine state_dicts actually produce: nested
+    dicts/lists/tuples, shelved ``Message``s with handle payloads, bare
+    handles/buffers, and stray ``jax.Array`` leaves.  (Columnar
+    ``ArrivalBatch`` state is already host-safe — ``Shelf.state_dict``
+    materializes its buffers via ``UpdateBuffer.state_dict``.)
+    """
+    from repro.core.deviceflow import Message  # late: avoid import cycle
+    if isinstance(obj, dict):
+        return {k: _host_runtime_view(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return type(obj)(_host_runtime_view(v) for v in obj)
+    if isinstance(obj, Message):
+        if isinstance(obj.payload, (UpdateHandle, UpdateBuffer)):
+            return dataclasses.replace(obj, payload=obj.payload.materialize())
+        return obj
+    if isinstance(obj, (UpdateHandle, UpdateBuffer)):
+        return obj.materialize()
+    if isinstance(obj, jax.Array):
+        return np.asarray(obj)
+    return obj
+
+
 def _flatten(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -80,24 +115,36 @@ class Checkpointer:
     def _step_dir(self, step: int) -> pathlib.Path:
         return self.dir / f"step_{step:010d}"
 
-    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> None:
+    def save(self, step: int, tree: Any, *, extra: dict | None = None,
+             runtime_state: Any = None) -> None:
         """Synchronous save with atomic manifest commit.
 
         Zero-copy handle payloads (``core.updates.UpdateHandle`` /
         ``UpdateBuffer``) anywhere in ``tree`` are materialized to host
         pytrees here — saved state must never contain live device references.
+
+        ``runtime_state`` (optional) is an arbitrary engine snapshot — e.g.
+        ``TaskEngine.state_dict(deviceflow=flow)`` with in-flight scalar
+        messages and columnar batches — pickled to ``runtime.pkl`` inside
+        the step directory after device references are materialized to host
+        arrays.  Restore it with :meth:`restore_runtime_state`.
         """
         leaves, _ = _flatten(materialize_handles(tree))
         tmp = pathlib.Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
         try:
             np.savez(tmp / f"shard-{self.host_id}.npz",
                      **{k: v for k, v in leaves})
+            if runtime_state is not None:
+                with open(tmp / "runtime.pkl", "wb") as f:
+                    pickle.dump(_host_runtime_view(runtime_state), f,
+                                protocol=pickle.HIGHEST_PROTOCOL)
             manifest = {
                 "step": step,
                 "num_hosts": self.num_hosts,
                 "keys": [k for k, _ in leaves],
                 "time": time.time(),
                 "extra": _jsonify(extra or {}),
+                "has_runtime_state": runtime_state is not None,
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             target = self._step_dir(step)
@@ -110,7 +157,8 @@ class Checkpointer:
         self._gc()
 
     def save_async(self, step: int, tree: Any, *,
-                   extra: dict | None = None) -> None:
+                   extra: dict | None = None,
+                   runtime_state: Any = None) -> None:
         """Overlap checkpoint I/O with the next training steps.
 
         Device→host transfer happens synchronously (cheap, and guarantees a
@@ -118,10 +166,13 @@ class Checkpointer:
         """
         self.wait()
         host_tree = jax.tree.map(np.asarray, materialize_handles(tree))
+        host_runtime = (None if runtime_state is None
+                        else _host_runtime_view(runtime_state))
 
         def work():
             try:
-                self.save(step, host_tree, extra=extra)
+                self.save(step, host_tree, extra=extra,
+                          runtime_state=host_runtime)
             except BaseException as e:  # surfaced on next wait()
                 self._async_err.append(e)
 
@@ -176,6 +227,23 @@ class Checkpointer:
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), out)
         return tree, manifest.get("extra", {})
+
+    def restore_runtime_state(self, step: int | None = None) -> Any:
+        """The ``runtime.pkl`` engine snapshot saved alongside ``step`` (the
+        latest step when ``None``), or ``None`` if that save carried no
+        runtime state.  Feed it to ``TaskEngine.load_state_dict`` /
+        ``DeviceFlow.load_state_dict`` — in-flight columnar batches restore
+        with their buffers rebuilt as device arrays and shared-buffer
+        identity preserved."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self._step_dir(step) / "runtime.pkl"
+        if not path.exists():
+            return None
+        with open(path, "rb") as f:
+            return pickle.load(f)
 
     def _gc(self) -> None:
         steps = sorted(

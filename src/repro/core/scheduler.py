@@ -884,7 +884,7 @@ class TaskEngine:
                     if ex.finished_t is not None), default=0.0)
 
     # -- checkpointing --------------------------------------------------------
-    def state_dict(self) -> dict:
+    def state_dict(self, deviceflow=None) -> dict:
         """Resume-safe engine state (JSON-friendly; no Task objects).
 
         Captures the queue order, every live execution's grant/progress and
@@ -892,6 +892,12 @@ class TaskEngine:
         *not* serialized — like ``DeviceFlow.load_state_dict`` after
         ``register_task``, the caller re-supplies the ``Task`` objects on
         restore.
+
+        ``deviceflow`` (optional) embeds the message plane's shelves and
+        dispatcher state in the same snapshot — one unified engine state
+        covering scheduled round events AND in-flight arrivals (including
+        columnar ``ArrivalBatch`` segments, whose update buffers are
+        materialized to host arrays by ``Shelf.state_dict``).
         """
         def enc(ex: TaskExecution) -> dict:
             return {
@@ -932,10 +938,13 @@ class TaskEngine:
             # PCG64-style state dicts are plain ints/strings — JSON-safe —
             # so a restored engine draws the exact same sampled runtimes.
             state["duration_rng"] = self.duration_rng.bit_generator.state
+        if deviceflow is not None:
+            state["deviceflow"] = deviceflow.state_dict()
         return state
 
     def load_state_dict(self, state: Mapping,
-                        tasks: Iterable[Task]) -> None:
+                        tasks: Iterable[Task],
+                        deviceflow=None) -> None:
         """Rebuild engine state from ``state_dict`` output.
 
         ``tasks`` supplies the Task objects referenced by the saved state
@@ -952,8 +961,14 @@ class TaskEngine:
         PAUSED (preempted) executions restore un-frozen and un-scheduled;
         they sit in the restored queue and resume at the next event
         boundary that fits them, exactly like the live engine.
+
+        ``deviceflow`` (optional) receives the embedded message-plane state
+        when the snapshot carries one (``state_dict(deviceflow=...)``) —
+        call ``register_task`` for every task first so dispatchers rebind.
         """
         by_id = {t.task_id: t for t in tasks}
+        if deviceflow is not None and "deviceflow" in state:
+            deviceflow.load_state_dict(state["deviceflow"])
         self.clock.now = float(state["now"])
         if self.duration_rng is not None and "duration_rng" in state:
             self.duration_rng.bit_generator.state = state["duration_rng"]

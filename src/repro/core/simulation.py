@@ -59,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocation import AllocationResult
-from repro.core.deviceflow import DeviceFlow, Message
+from repro.core.deviceflow import ArrivalBatch, DeviceFlow, Message
 from repro.core.updates import (
     UpdateBuffer,
     UpdateHandle,
@@ -433,16 +433,61 @@ class GradeRoundBreakdown:
     mean_duration_s: float  # mean sampled round duration across the grade
 
 
+class ArrivalMessageView:
+    """Scalar-``Message`` compat adapter over mixed round emissions.
+
+    Columnar rounds emit ``ArrivalBatch``es (plus scalar q_i benchmarking
+    messages); consumers of ``FederatedRoundOutcome.messages`` — launch
+    scripts, fault injection, tests — still see one ``Message`` per device.
+    Materialization is lazy and cached: the hot path (DeviceFlow submission,
+    aggregation) never touches it, so reading ``.messages`` is the only
+    thing that pays the per-row object cost.
+    """
+
+    __slots__ = ("_emissions", "_mat")
+
+    def __init__(self, emissions: "list[Message | ArrivalBatch]"):
+        self._emissions = emissions
+        self._mat: list[Message] | None = None
+
+    def _materialize(self) -> list[Message]:
+        if self._mat is None:
+            out: list[Message] = []
+            for e in self._emissions:
+                if isinstance(e, ArrivalBatch):
+                    out.extend(e.messages())
+                else:
+                    out.append(e)
+            self._mat = out
+        return self._mat
+
+    def __len__(self) -> int:
+        return sum(e.n if isinstance(e, ArrivalBatch) else 1
+                   for e in self._emissions)
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __getitem__(self, i):
+        return self._materialize()[i]
+
+    def __repr__(self) -> str:
+        return f"ArrivalMessageView(n={len(self)})"
+
+
 @dataclasses.dataclass
 class FederatedRoundOutcome:
     num_logical: int
     num_physical: int
-    messages: list[Message]
+    messages: "list[Message] | ArrivalMessageView"
     reports: list[RoundReport]
     arrival_times: np.ndarray | None = None  # per-message virtual times
     per_grade: dict[str, GradeRoundBreakdown] = dataclasses.field(
         default_factory=dict)
     client_metrics: list = dataclasses.field(default_factory=list)
+    # Columnar rounds: the raw ArrivalBatch emissions (empty on the scalar
+    # plane).  ``messages`` adapts them back to per-row Message views.
+    batches: list[ArrivalBatch] = dataclasses.field(default_factory=list)
 
     @property
     def makespan_s(self) -> float:
@@ -503,10 +548,18 @@ class HybridSimulation:
         zero_copy: bool = True,
         recycle_buffers: bool = False,
         stream_chunks: bool = False,
+        columnar: bool = True,
     ):
         self.zero_copy = zero_copy
         self.recycle_buffers = recycle_buffers
         self.stream_chunks = stream_chunks
+        # Columnar message plane: zero-copy chunks emit ONE ArrivalBatch per
+        # cohort chunk (struct-of-arrays columns + the chunk's UpdateBuffer)
+        # instead of one Message object per device — the difference between
+        # O(devices) Python and O(chunks) at the 10^6-device scale.  Only
+        # meaningful with zero_copy (batches vectorize UpdateHandle rows);
+        # ``columnar=False`` keeps the scalar plane as reference.
+        self.columnar = columnar
         self._retired: dict = {}  # (tier id, rows) -> [UpdateBuffer]
         self._staged: dict = {}
         self.logical = logical
@@ -547,29 +600,67 @@ class HybridSimulation:
         id_offset: int = 0,
         metrics_out: list | None = None,
         materialize_rows: Sequence[int] = (),
-    ) -> tuple[list[Message], jax.Array]:
+    ) -> "tuple[list[Message | ArrivalBatch], jax.Array]":
         """Run one grade's split: [0, num_logical) through the logical tier,
         the rest through ``tier``'s device backend.  Returns the emitted
-        messages (``device_id`` offset by ``id_offset``) and the advanced rng.
+        arrivals (``device_id`` offset by ``id_offset``) and the advanced rng.
 
-        Zero-copy mode payloads are ``UpdateHandle``s into the chunk's
-        device-resident ``UpdateBuffer``; ``materialize_rows`` names the
-        grade-local rows (the q_i benchmarking devices) whose payloads are
-        materialized to host pytrees *after* every chunk has been dispatched,
-        so benchmarking never stalls the cohort pipeline.
+        Zero-copy mode emits ONE columnar ``ArrivalBatch`` per cohort chunk
+        (the chunk's device-resident ``UpdateBuffer`` + struct-of-array
+        columns); ``materialize_rows`` names the grade-local rows (the q_i
+        benchmarking devices) that are instead emitted as scalar ``Message``s
+        whose payloads are materialized to host pytrees *after* every chunk
+        has been dispatched, so benchmarking never stalls the cohort
+        pipeline.  ``columnar=False`` (or the host path) emits one Message
+        per device, as before.
         """
         n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
         if not 0 <= num_logical <= n_total:
             raise ValueError("num_logical out of range")
         take = lambda tree, sl: jax.tree.map(lambda x: x[sl], tree)
-        msgs: list[Message] = []
+        emissions: "list[Message | ArrivalBatch]" = []
+        mat_set = set(materialize_rows)
+        columnar = self.columnar and self.zero_copy
+        bench_pos: dict[int, int] = {}  # grade-local row -> emission index
+
+        def emit_batch(buf: UpdateBuffer, lo, hi):
+            # Columnar plane: the whole chunk is ONE struct-of-arrays record
+            # sharing the chunk's UpdateBuffer — no per-device objects.  The
+            # q_i benchmarking rows split out as scalar Messages (their
+            # payloads materialize to host pytrees post-round).
+            num_samples_arr = np.asarray(num_samples[lo:hi], np.int64)
+            bench = sorted(r for r in mat_set if lo <= r < hi)
+            prev = lo
+            for r in bench + [hi]:
+                if r > prev:
+                    emissions.append(ArrivalBatch(
+                        task_id, round_idx,
+                        rows=np.arange(prev - lo, r - lo, dtype=np.int32),
+                        num_samples=num_samples_arr[prev - lo:r - lo],
+                        device_ids=np.arange(id_offset + prev,
+                                             id_offset + r, dtype=np.int64),
+                        buffer=buf))
+                if r < hi:
+                    bench_pos[r] = len(emissions)
+                    emissions.append(Message(
+                        task_id=task_id,
+                        device_id=id_offset + r,
+                        round_idx=round_idx,
+                        payload=buf.handle(r - lo),
+                        num_samples=int(num_samples[r]),
+                    ))
+                prev = r + 1
 
         def emit_handles(buf: UpdateBuffer, lo, hi):
-            # Zero-copy: the chunk's update buffer stays on device; messages
-            # carry (buffer, row) handles.  No device_get, no host pytrees —
-            # the next chunk dispatches while this one still computes.
+            # Zero-copy scalar plane: the chunk's update buffer stays on
+            # device; messages carry (buffer, row) handles.  No device_get,
+            # no host pytrees — the next chunk dispatches while this one
+            # still computes.
+            if columnar:
+                emit_batch(buf, lo, hi)
+                return
             for j in range(hi - lo):
-                msgs.append(
+                emissions.append(
                     Message(
                         task_id=task_id,
                         device_id=id_offset + lo + j,
@@ -585,7 +676,7 @@ class HybridSimulation:
             host_params = jax.device_get(stacked_params)
             leaves, treedef = jax.tree.flatten(host_params)
             for j in range(hi - lo):
-                msgs.append(
+                emissions.append(
                     Message(
                         task_id=task_id,
                         device_id=id_offset + lo + j,
@@ -596,16 +687,21 @@ class HybridSimulation:
                 )
 
         stream = self.stream_chunks and self.deviceflow is not None
-        mat_set = set(materialize_rows)
 
         def stream_chunk(n_before: int) -> None:
-            # Streaming feed: this chunk's messages enter DeviceFlow now, so
+            # Streaming feed: this chunk's arrivals enter DeviceFlow now, so
             # a streaming aggregation service fires the chunk's fed_reduce
             # partial while the next chunk's cohort is still computing.  The
             # q_i benchmarking rows are held back until materialization.
-            fresh = [m for i, m in enumerate(msgs[n_before:], start=n_before)
-                     if i not in mat_set]
-            if fresh:
+            held = set(bench_pos.values()) if columnar else mat_set
+            fresh = [e for i, e in enumerate(emissions[n_before:],
+                                             start=n_before)
+                     if i not in held]
+            if not fresh:
+                return
+            if any(isinstance(e, ArrivalBatch) for e in fresh):
+                self.deviceflow.submit_arrivals(fresh)
+            else:
                 self.deviceflow.submit_many(fresh)
 
         def run_chunk(sim_tier, lo, hi, sub):
@@ -642,7 +738,7 @@ class HybridSimulation:
         while idx < num_logical:
             hi = min(idx + self.logical.cohort_size, num_logical)
             rng, sub = jax.random.split(rng)
-            n_before = len(msgs)
+            n_before = len(emissions)
             run_chunk(self.logical, idx, hi, sub)
             if stream:
                 stream_chunk(n_before)
@@ -654,7 +750,7 @@ class HybridSimulation:
         while idx < n_total:
             hi = min(idx + tier.cohort_size, n_total)
             rng, sub = jax.random.split(rng)
-            n_before = len(msgs)
+            n_before = len(emissions)
             run_chunk(tier, idx, hi, sub)
             if stream:
                 stream_chunk(n_before)
@@ -662,14 +758,18 @@ class HybridSimulation:
 
         # Deferred host materialization: only the q_i benchmarking devices'
         # updates become host pytrees, after the whole grade has dispatched.
+        # (Columnar mode: bench rows live at ``bench_pos[r]``; scalar mode:
+        # emission index == grade-local row.)
         for r in materialize_rows:
-            m = msgs[r]
+            i = bench_pos.get(r, r)
+            m = emissions[i]
             if isinstance(m.payload, UpdateHandle):
-                msgs[r] = dataclasses.replace(
+                emissions[i] = dataclasses.replace(
                     m, payload=m.payload.materialize())
         if stream and mat_set:
-            self.deviceflow.submit_many([msgs[r] for r in sorted(mat_set)])
-        return msgs, rng
+            self.deviceflow.submit_many(
+                [emissions[bench_pos.get(r, r)] for r in sorted(mat_set)])
+        return emissions, rng
 
     # -- grade-partitioned rounds (allocator-driven) -----------------------
     def run_plan_round(
@@ -726,7 +826,7 @@ class HybridSimulation:
                     f"q={entry.num_benchmarking})")
             per_grade_inputs.append((entry, batches, n_samples, n_total))
 
-        msgs: list[Message] = []
+        emissions: "list[Message | ArrivalBatch]" = []
         reports: list[RoundReport] = []
         arrivals: list[np.ndarray] = []
         breakdown: dict[str, GradeRoundBreakdown] = {}
@@ -739,14 +839,14 @@ class HybridSimulation:
                 breakdown[entry.grade] = GradeRoundBreakdown(
                     entry.grade, 0, 0, 0, 0.0, 0.0)
                 continue
-            grade_msgs, rng = self._run_split(
+            grade_emissions, rng = self._run_split(
                 tier, task_id, round_idx, global_params, batches, n_samples,
                 entry.num_logical, rng, id_offset=offset,
                 metrics_out=client_metrics,
                 materialize_rows=range(
                     n_total - entry.num_benchmarking, n_total),
             )
-            msgs.extend(grade_msgs)
+            emissions.extend(grade_emissions)
 
             # Behavioral side: one fleet sample covers the grade (sampled
             # under grade-LOCAL ids so per-device RNG streams stay stable
@@ -775,9 +875,20 @@ class HybridSimulation:
             offset += n_total
 
         arrival_times = (np.concatenate(arrivals) if arrivals else None)
-        if self.deviceflow is not None and msgs:
+        batches = [e for e in emissions if isinstance(e, ArrivalBatch)]
+        if self.deviceflow is not None and emissions:
             if not self.stream_chunks:  # streamed rounds already submitted
-                self.deviceflow.submit_many(msgs, ts=arrival_times)
+                if batches:
+                    # Columnar plane: per-row arrival times indexed straight
+                    # from the batch's device_ids column — no per-row objects.
+                    ts = np.concatenate([
+                        arrival_times[e.device_ids]
+                        if isinstance(e, ArrivalBatch)
+                        else arrival_times[e.device_id:e.device_id + 1]
+                        for e in emissions])
+                    self.deviceflow.submit_arrivals(emissions, ts=ts)
+                else:
+                    self.deviceflow.submit_many(emissions, ts=arrival_times)
             # The round ends when the slowest device reports, not at clock.now.
             self.deviceflow.round_complete(
                 task_id, t=float(np.max(arrival_times)))
@@ -787,7 +898,9 @@ class HybridSimulation:
             num_logical=sum(e.num_logical for e in plan.entries),
             num_physical=sum(e.num_physical + e.num_benchmarking
                              for e in plan.entries),
-            messages=msgs,
+            messages=(ArrivalMessageView(emissions) if batches
+                      else emissions),
+            batches=batches,
             reports=reports,
             arrival_times=arrival_times,
             per_grade=breakdown,
@@ -818,7 +931,7 @@ class HybridSimulation:
         n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
         n_bench_rows = min(max(benchmark_devices, 0), n_total - num_logical)
         metrics: list = []
-        msgs, _ = self._run_split(
+        emissions, _ = self._run_split(
             tier, task_id, round_idx, global_params, client_batches,
             np.asarray(num_samples), num_logical, rng, metrics_out=metrics,
             materialize_rows=range(num_logical, num_logical + n_bench_rows))
@@ -851,9 +964,18 @@ class HybridSimulation:
                 mean_duration_s=float(offsets_s.mean()),
             )
 
+        batches = [e for e in emissions if isinstance(e, ArrivalBatch)]
         if self.deviceflow is not None:
             if not self.stream_chunks:  # streamed rounds already submitted
-                self.deviceflow.submit_many(msgs, ts=arrival_times)
+                if batches:
+                    ts = (None if arrival_times is None else np.concatenate([
+                        arrival_times[e.device_ids]
+                        if isinstance(e, ArrivalBatch)
+                        else arrival_times[e.device_id:e.device_id + 1]
+                        for e in emissions]))
+                    self.deviceflow.submit_arrivals(emissions, ts=ts)
+                else:
+                    self.deviceflow.submit_many(emissions, ts=arrival_times)
             # The round ends when the slowest device reports, not at clock.now.
             t_end = (float(np.max(arrival_times))
                      if arrival_times is not None and len(arrival_times)
@@ -864,7 +986,9 @@ class HybridSimulation:
         return FederatedRoundOutcome(
             num_logical=num_logical,
             num_physical=n_total - num_logical,
-            messages=msgs,
+            messages=(ArrivalMessageView(emissions) if batches
+                      else emissions),
+            batches=batches,
             reports=reports,
             arrival_times=arrival_times,
             per_grade=breakdown,

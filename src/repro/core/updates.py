@@ -154,6 +154,28 @@ class UpdateBuffer:
         return (f"UpdateBuffer(rows={self.num_rows}, "
                 f"leaves={len(self.shapes)}, row_nbytes={self.row_nbytes})")
 
+    # -- checkpointing -----------------------------------------------------
+    def state_dict(self) -> dict:
+        """Snapshot with leaves materialized to host arrays and the treedef
+        stored as a container *skeleton* (``unflatten(treedef, 0..n)``) —
+        plain dicts/lists/ints only, so columnar engine snapshots with
+        in-flight ``ArrivalBatch``es hold no live device references and
+        survive pickling."""
+        skeleton = jax.tree_util.tree_unflatten(
+            self.treedef, list(range(len(self.shapes))))
+        return {
+            "leaves2d": [np.asarray(leaf) for leaf in self.leaves2d],
+            "skeleton": skeleton,
+            "shapes": [tuple(s) for s in self.shapes],
+            "dtypes": [str(d) for d in self.dtypes],
+        }
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "UpdateBuffer":
+        treedef = jax.tree.structure(d["skeleton"])
+        return cls([jnp.asarray(leaf) for leaf in d["leaves2d"]], treedef,
+                   d["shapes"], [np.dtype(s) for s in d["dtypes"]])
+
 
 class UpdateHandle:
     """Lightweight ``Message.payload``: a (buffer, row) reference.

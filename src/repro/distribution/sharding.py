@@ -287,3 +287,29 @@ def cache_shardings(cfg: ModelConfig, lmesh: LogicalMesh, cache_shape: Any,
         return sh(*(([None] * extra) + list(base)))
 
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def make_fleet_mesh(num_fleet_shards: int | None = None,
+                    model_shards: int = 1) -> Mesh:
+    """``(dp, mp)`` mesh for fleet-sharded federated rounds.
+
+    The redco ``mesh_utils`` idiom: reshape the flat local device array to
+    ``(devices // model_shards, model_shards)`` and name the axes ``dp``
+    (fleet shards — cohort rows and ``fed_reduce`` rows split here) and
+    ``mp`` (intra-model shards).  ``num_fleet_shards=None`` uses every
+    device; CPU CI exercises the same code path at ``dp=1``.
+    """
+    devices = jax.devices()
+    if num_fleet_shards is None:
+        if len(devices) % model_shards:
+            raise ValueError(
+                f"{len(devices)} devices not divisible by "
+                f"model_shards={model_shards}")
+        num_fleet_shards = len(devices) // model_shards
+    need = num_fleet_shards * model_shards
+    if need > len(devices):
+        raise ValueError(
+            f"fleet mesh needs {need} devices, have {len(devices)}")
+    mesh_devices = np.array(devices[:need]).reshape(
+        num_fleet_shards, model_shards)
+    return Mesh(mesh_devices, ("dp", "mp"))

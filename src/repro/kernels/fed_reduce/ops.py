@@ -12,11 +12,21 @@ Implementations:
   CPU-CI correctness path;
 * ``ref`` — fused jnp ``tensordot`` (also the fast CPU execution path);
 * ``auto`` — ``pallas`` on TPU, ``ref`` elsewhere.
+
+**Mesh sharding.**  ``fed_reduce(..., mesh=...)`` shards the row dimension
+over the mesh's ``dp`` axis with ``shard_map`` + ``psum``: each fleet shard
+reduces its slice of the stacked rows with the selected implementation, then
+the per-shard partial sums combine across the axis.  Rows are zero-weight
+padded up to shard divisibility — padding contributes exactly 0 to the
+weighted sum, so the sharded result matches the unsharded one bit-for-bit
+per shard and within accumulation tolerance across shards.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.fed_reduce.fed_reduce import fed_reduce_pallas
 from repro.kernels.fed_reduce.ref import fed_reduce_ref
@@ -28,15 +38,8 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def fed_reduce(stack: jax.Array, weights: jax.Array, *,
-               impl: str = "auto") -> jax.Array:
-    """Weighted row-sum ``sum_i weights[i] * stack[i]`` -> f32 ``stack[0]``
-    shape.  ``stack``: (n, ...); ``weights``: (n,)."""
-    if stack.ndim < 1 or stack.shape[0] != weights.shape[0]:
-        raise ValueError(
-            f"stack rows {stack.shape} must match weights {weights.shape}")
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
+def _fed_reduce_local(stack: jax.Array, weights: jax.Array,
+                      impl: str) -> jax.Array:
     if impl == "ref":
         return fed_reduce_ref(stack, weights)
     if impl in ("pallas", "pallas_interpret"):
@@ -47,3 +50,41 @@ def fed_reduce(stack: jax.Array, weights: jax.Array, *,
             interpret=(impl == "pallas_interpret" or not _on_tpu()))
         return out.reshape(stack.shape[1:])
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def fed_reduce(stack: jax.Array, weights: jax.Array, *,
+               impl: str = "auto", mesh=None,
+               axis: str = "dp") -> jax.Array:
+    """Weighted row-sum ``sum_i weights[i] * stack[i]`` -> f32 ``stack[0]``
+    shape.  ``stack``: (n, ...); ``weights``: (n,).
+
+    ``mesh`` (a ``jax.sharding.Mesh`` containing ``axis``) distributes the
+    row reduction across fleet shards; ``None`` keeps the single-device
+    path.
+    """
+    if stack.ndim < 1 or stack.shape[0] != weights.shape[0]:
+        raise ValueError(
+            f"stack rows {stack.shape} must match weights {weights.shape}")
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if mesh is None:
+        return _fed_reduce_local(stack, weights, impl)
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no {axis!r} axis: {mesh.axis_names}")
+    shards = int(mesh.shape[axis])
+    n = int(stack.shape[0])
+    pad = (-n) % shards
+    if pad:
+        # Zero-weight rows contribute exactly 0 to the weighted sum.
+        stack = jnp.concatenate(
+            [stack, jnp.zeros((pad,) + stack.shape[1:], stack.dtype)])
+        weights = jnp.concatenate(
+            [weights, jnp.zeros((pad,), weights.dtype)])
+    row_spec = P(axis, *([None] * (stack.ndim - 1)))
+
+    def _shard_reduce(s, w):
+        return jax.lax.psum(_fed_reduce_local(s, w, impl), axis)
+
+    return shard_map(
+        _shard_reduce, mesh=mesh, in_specs=(row_spec, P(axis)),
+        out_specs=P(*([None] * (stack.ndim - 1))))(stack, weights)

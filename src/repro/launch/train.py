@@ -49,7 +49,7 @@ from repro.core.task import GradeSpec, OperatorFlow, Task
 from repro.core.traffic_curves import right_tailed_normal
 from repro.core.updates import UpdateHandle
 from repro.data.tokens import TokenPipeline
-from repro.distribution.sharding import derive_logical_mesh
+from repro.distribution.sharding import derive_logical_mesh, make_fleet_mesh
 from repro.distribution.steps import build_train_step, init_train_state
 from repro.launch.mesh import make_production_mesh
 from repro.models.registry import get_model
@@ -125,7 +125,12 @@ def federated_training(args) -> dict:
         if args.trigger == "samples"
         else ScheduledTrigger(args.trigger_period)
     )
-    svc = AggregationService(global_params, trigger=trigger)
+    # --fleet-shards N shards cohort execution and the fused fed_reduce over
+    # an explicit ("dp", "mp") fleet mesh (redco-style data parallelism
+    # across fleet shards).
+    fleet_mesh = (make_fleet_mesh(args.fleet_shards)
+                  if args.fleet_shards else None)
+    svc = AggregationService(global_params, trigger=trigger, mesh=fleet_mesh)
     flow = DeviceFlow(svc, seed=args.seed)
     task_id = 0
     if args.traffic == "realtime":
@@ -156,10 +161,17 @@ def federated_training(args) -> dict:
                   physical_devices=max(1, n // 4))
         for g, n in zip(grade_names, per_grade)
     ]
+    # Non-compress rounds flow through the columnar plane: run_plan_round
+    # submits one ArrivalBatch per cohort chunk straight into DeviceFlow.
+    # Compression stays on the scalar plane (it is a host-side per-message
+    # payload transform), so the driver submits manually there.
     sim = HybridSimulation(
-        LogicalTier(local_train, cohort_size=cohort),
-        tiers={g: DeviceTier(local_train, GRADES[g], seed=args.seed)
-               for g in grade_names})
+        LogicalTier(local_train, cohort_size=cohort,
+                    mesh=fleet_mesh, data_axis="dp"),
+        tiers={g: DeviceTier(local_train, GRADES[g], seed=args.seed,
+                             mesh=fleet_mesh, data_axis="dp")
+               for g in grade_names},
+        deviceflow=None if args.compress else flow)
     cal = RuntimeCalibrator()  # Table-I prior until fleets report in
 
     losses = []
@@ -189,10 +201,9 @@ def federated_training(args) -> dict:
             [np.asarray(jax.tree.leaves(m)[0]).reshape(-1)
              for m in outcome.client_metrics]).mean()))
 
-        msgs = outcome.messages
         if args.compress:
             packed = []
-            for m in msgs:
+            for m in outcome.messages:
                 # Top-k compression is a host-side payload transform: zero-
                 # copy handle payloads materialize here (the compressed
                 # payload *is* the simulated wire format).
@@ -213,15 +224,19 @@ def federated_training(args) -> dict:
                 packed.append(dataclasses.replace(
                     m, payload=payload,
                     size_bytes=max(stats["nonzero"], 1) * 8))
-            msgs = packed
-        # Bulk Sorter path: fleet-sampled round durations as arrival times.
-        arrivals = flow.clock.now + np.asarray(outcome.arrival_times)
-        flow.submit_many(msgs, ts=arrivals)
-        flow.round_complete(task_id, t=float(arrivals.max()))
+            # Bulk Sorter path: fleet-sampled durations as arrival times.
+            arrivals = flow.clock.now + np.asarray(outcome.arrival_times)
+            flow.submit_many(packed, ts=arrivals)
+            flow.round_complete(task_id, t=float(arrivals.max()))
+            round_end = float(arrivals.max())
+        else:
+            # Columnar plane: run_plan_round already submitted the round's
+            # ArrivalBatches (+ bench messages) with fleet-sampled times.
+            round_end = float(np.max(outcome.arrival_times))
         # Rule-based dispatch points extend up to round_seconds past the
         # round end (= the slowest arrival); the run window must cover them
         # or the round's deliveries slip into the next window.
-        flow.run(float(arrivals.max()) + args.round_seconds)
+        flow.run(round_end + args.round_seconds)
         svc.tick(flow.clock.now)
         lat = svc.history[-1].mean_latency_s if svc.history else 0.0
         print(f"round {rnd:3d} client-loss {losses[-1]:.4f} "
@@ -241,7 +256,9 @@ class _TaskRouter:
         self.services: dict[int, AggregationService] = {}
 
     def __call__(self, d):
-        self.services[d.message.task_id](d)
+        # Delivery.task_id spans both planes (scalar message or columnar
+        # batch) without materializing per-row adapter objects.
+        self.services[d.task_id](d)
 
 
 def multi_task_federated(args) -> dict:
@@ -393,6 +410,9 @@ def main(argv=None):
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--round-seconds", type=float, default=60.0)
     ap.add_argument("--dropout", type=float, default=0.0)
+    ap.add_argument("--fleet-shards", type=int, default=0,
+                    help="shard cohorts + fed_reduce over a ('dp','mp') "
+                         "fleet mesh with this many data shards (0 = off)")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--compress-fraction", type=float, default=0.01)
     ap.add_argument("--checkpoint-dir", default="artifacts/ckpt")

@@ -191,3 +191,165 @@ def test_table2_fidelity_all_curves():
                         for t in ts])
         r = np.corrcoef(cs, ref)[0, 1]
         assert r > 0.99, (curve.name, r)
+
+
+# --------------------------------------------------------------------------- #
+# Columnar message plane: ArrivalBatch end-to-end through the same Shelf /
+# Dispatcher machinery as scalar Messages.
+# --------------------------------------------------------------------------- #
+from repro.core.deviceflow import ArrivalBatch  # noqa: E402
+
+
+def batch(rows, task_id=0, dev0=0, nbytes=16, created_t=None, round_idx=0):
+    """Metadata-only batch (no UpdateBuffer): fine for transport tests."""
+    return ArrivalBatch(
+        task_id, round_idx, rows=np.arange(rows, dtype=np.int32),
+        created_t=created_t, nbytes=np.full(rows, nbytes, np.int64),
+        device_ids=np.arange(dev0, dev0 + rows, dtype=np.int64))
+
+
+def flat_deliveries(got):
+    """Every delivery flattened to (t, device_id) rows, in order."""
+    out = []
+    for d in got:
+        if d.batch is not None:
+            out.extend((d.t, int(dev)) for dev in d.batch.device_ids)
+        else:
+            out.append((d.t, d.message.device_id))
+    return out
+
+
+def test_batch_dispatch_matches_scalar_plane_exactly():
+    """Dispatch-group membership and threshold-crossing timestamps of a
+    columnar submit must equal the same rows submitted as per-device
+    Messages — the batch plane is an encoding change, not a semantics
+    change."""
+    ts = np.array([2.0, 2.0, 3.0, 5.0, 5.0, 5.0, 9.0])
+    # Scalar reference.
+    got_s, sink_s = collect()
+    flow_s = DeviceFlow(sink_s)
+    flow_s.register_task(0, AccumulatedStrategy(thresholds=(3, 2)))
+    flow_s.submit_many([Message(0, i, 0, payload=None, size_bytes=16)
+                        for i in range(7)], ts=ts)
+    # Columnar: rows 0-4 as one batch, 5-6 as scalars, one mixed call.
+    got_b, sink_b = collect()
+    flow_b = DeviceFlow(sink_b)
+    flow_b.register_task(0, AccumulatedStrategy(thresholds=(3, 2)))
+    flow_b.submit_arrivals(
+        [batch(5), Message(0, 5, 0, payload=None, size_bytes=16),
+         Message(0, 6, 0, payload=None, size_bytes=16)], ts=ts)
+    assert flat_deliveries(got_b) == flat_deliveries(got_s)
+    for flow in (flow_s, flow_b):
+        flow.round_complete(0)
+        flow.run()
+        assert flow.conservation_ok(0)
+    s_s, s_b = flow_s.shelf(0), flow_b.shelf(0)
+    assert s_b.total_received == s_s.total_received == 7
+    assert s_b.total_bytes_received == s_s.total_bytes_received == 7 * 16
+    assert s_b.total_bytes_dispatched == s_s.total_bytes_dispatched
+
+
+def test_batch_created_t_nan_sentinel():
+    """NaN is the columnar unstamped sentinel (scalar plane: None): NaN rows
+    stamp with their arrival time at submit; producer stamps — including
+    0.0 — survive verbatim."""
+    got, sink = collect()
+    flow = DeviceFlow(sink)
+    flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+    created = np.array([np.nan, 0.0, 1.5])
+    flow.submit_batch(batch(3, created_t=created), ts=[7.0, 8.0, 9.0])
+    stamps = {d.message.device_id: d.message.created_t for d in got}
+    assert stamps[0] == 7.0   # unstamped -> arrival time
+    assert stamps[1] == 0.0   # producer stamp at zero survives t>0
+    assert stamps[2] == 1.5   # ordinary producer stamp survives
+    # Original batch columns are never mutated in place.
+    assert np.isnan(created[0])
+
+
+def test_batch_state_roundtrip_mid_threshold():
+    """Snapshot with a partially-consumed batch group on the shelf restores
+    to the identical delivery timeline."""
+    def run(flow, got, snapshot_after=None):
+        flow.register_task(0, AccumulatedStrategy(thresholds=(4,)))
+        flow.submit_arrivals([batch(3), batch(2, dev0=3)],
+                             ts=[1.0, 2.0, 3.0, 4.0, 5.0])
+        state = flow.state_dict() if snapshot_after is not None else None
+        return state
+
+    got_a, sink_a = collect()
+    flow_a = DeviceFlow(sink_a)
+    state = run(flow_a, got_a, snapshot_after=True)
+    # 4-threshold crossed once: 4 rows delivered, 1 row still shelved.
+    assert len(flat_deliveries(got_a)) == 4
+    assert len(flow_a.shelf(0)) == 1
+
+    got_b, sink_b = collect()
+    flow_b = DeviceFlow(sink_b)
+    flow_b.register_task(0, AccumulatedStrategy(thresholds=(4,)))
+    flow_b.load_state_dict(state)
+    assert len(flow_b.shelf(0)) == 1
+    # Continue both flows identically: 3 more rows -> second crossing.
+    for flow in (flow_a, flow_b):
+        flow.submit_batch(batch(3, dev0=5), ts=[6.0, 7.0, 8.0])
+    assert flat_deliveries(got_b) == flat_deliveries(got_a)[4:]
+    assert flow_b.conservation_ok(0)
+
+
+def test_batch_failure_prob_conservation():
+    got, sink = collect()
+    flow = DeviceFlow(sink, seed=3)
+    flow.register_task(0, AccumulatedStrategy(
+        thresholds=(1,), failure_prob=0.5))
+    for i in range(20):
+        flow.submit_batch(batch(100, dev0=100 * i))
+    n_delivered = len(flat_deliveries(got))
+    s = flow.shelf(0)
+    assert flow.conservation_ok(0)
+    assert s.total_received == 2000
+    assert s.total_dispatched == n_delivered
+    assert s.total_dropped == 2000 - n_delivered
+    assert 0.42 < n_delivered / 2000 < 0.58
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.sampled_from(("scalar", "batch", "round")),
+                  st.integers(1, 9)),
+        min_size=0, max_size=25),
+    thresholds=st.lists(st.integers(1, 7), min_size=1, max_size=3),
+    p=st.floats(0.0, 1.0),
+)
+def test_interleaved_plane_conservation_property(ops, thresholds, p):
+    """Any interleaving of scalar submits, columnar batch submits, and
+    round_completes conserves rows across both planes; with no failures it
+    conserves bytes exactly (every row weighs 16 bytes here, so pending
+    bytes are 16 * pending rows)."""
+    got, sink = collect()
+    flow = DeviceFlow(sink, seed=11)
+    flow.register_task(0, AccumulatedStrategy(
+        thresholds=tuple(thresholds), failure_prob=p))
+    dev = 0
+    sent_rows = 0
+    for kind, k in ops:
+        if kind == "scalar":
+            flow.submit_many([Message(0, dev + i, 0, payload=None,
+                                      size_bytes=16) for i in range(k)])
+            dev += k
+            sent_rows += k
+        elif kind == "batch":
+            flow.submit_batch(batch(k, dev0=dev, nbytes=16))
+            dev += k
+            sent_rows += k
+        else:
+            flow.round_complete(0)
+            flow.run()
+    s = flow.shelf(0)
+    assert flow.conservation_ok(0)
+    assert s.total_received == sent_rows
+    assert s.total_bytes_received == 16 * sent_rows
+    assert s.total_dispatched == len(flat_deliveries(got))
+    if p == 0.0:
+        # Byte conservation: received == dispatched + still-pending.
+        assert s.total_bytes_received == \
+            s.total_bytes_dispatched + 16 * len(s)

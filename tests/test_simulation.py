@@ -401,3 +401,65 @@ def test_backlog_above_threshold_drains_fully():
     assert len(got) == 9  # 3 batches of 3 drained, 1 message pending
     assert len(flow.shelf(0)) == 1
     assert flow.conservation_ok(0)
+
+
+# --------------------------------------------------------------------------- #
+# Columnar message plane: batch emissions end-to-end through the round engine
+# --------------------------------------------------------------------------- #
+from repro.core.deviceflow import ArrivalBatch  # noqa: E402
+from repro.core.federation import ClientCountTrigger  # noqa: E402
+from repro.core.simulation import ArrivalMessageView  # noqa: E402
+
+
+def test_columnar_round_matches_scalar_plane_numerics():
+    """columnar=True (batch emissions) and columnar=False (per-device
+    messages) aggregate identical f32 cohort outputs — the global params
+    must match to float tolerance and both planes conserve rows."""
+    local, params, batches, counts = _ctr_setup()
+    finals = {}
+    for columnar in (True, False):
+        svc = AggregationService(
+            ctr_lib.lr_init(jax.random.PRNGKey(0), 16),
+            trigger=ClientCountTrigger(12))
+        flow = DeviceFlow(svc)
+        flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+        sim = HybridSimulation(LogicalTier(local, cohort_size=8),
+                               DeviceTier(local, GRADES["High"],
+                                          cohort_size=4),
+                               deviceflow=flow, columnar=columnar)
+        out = sim.run_round(
+            task_id=0, round_idx=0, global_params=params,
+            client_batches=batches, num_samples=counts, num_logical=8,
+            rng=jax.random.PRNGKey(1))
+        assert flow.conservation_ok(0)
+        assert len(svc.history) == 1
+        assert bool(out.batches) is columnar
+        finals[columnar] = jax.device_get(svc.global_params)
+    for a, b in zip(jax.tree.leaves(finals[True]),
+                    jax.tree.leaves(finals[False])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_columnar_outcome_exposes_messages_view():
+    """outcome.messages stays a per-device sequence (lazy adapter) while
+    outcome.batches carries the columnar emissions; device ids cover the
+    cohort exactly once across both."""
+    local, params, batches, counts = _ctr_setup()
+    sim = HybridSimulation(LogicalTier(local, cohort_size=8),
+                           DeviceTier(local, GRADES["High"], cohort_size=4))
+    out = sim.run_round(
+        task_id=0, round_idx=0, global_params=params, client_batches=batches,
+        num_samples=counts, num_logical=8, rng=jax.random.PRNGKey(1),
+        benchmark_devices=2)
+    assert isinstance(out.messages, ArrivalMessageView)
+    assert len(out.messages) == 12
+    ids = sorted(m.device_id for m in out.messages)
+    assert ids == list(range(12))
+    batch_ids = np.concatenate([b.device_ids for b in out.batches])
+    bench_ids = {8, 9}  # first 2 device-tier rows materialize reports
+    assert set(batch_ids.tolist()) == set(range(12)) - bench_ids
+    # Benchmarking devices' payloads materialized to host pytrees; batch
+    # rows stay as shared-buffer references.
+    by_id = {m.device_id: m for m in out.messages}
+    assert isinstance(by_id[8].payload, dict)
+    assert all(b.buffer is not None for b in out.batches)
