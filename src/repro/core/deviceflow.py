@@ -123,7 +123,10 @@ class ArrivalBatch(_Weakrefable):
       (the columnar equivalent of the scalar ``created_t=None`` sentinel)
       and is filled with the arrival time at submit;
     * ``nbytes: int64[n]`` — wire size per row (defaults to the buffer's
-      ``row_nbytes``);
+      ``row_nbytes``, so a quantized buffer — ``UpdateBuffer(wire="int8")``
+      with its int8 leaves + per-leaf scale columns — reports its real
+      ~4x-smaller wire footprint through ``Shelf.total_bytes_*`` without any
+      caller involvement);
     * ``num_samples: int64[n]`` and ``device_ids: int64[n]`` — aggregation
       weight and global identity per row.
 

@@ -84,17 +84,24 @@ def fedavg_delta(global_params: Params, updates: list[Params],
 
 
 def _fused_reduce_apply(global_params: Params, buf_leaves: tuple,
-                        wvecs: tuple, inv_total: jax.Array, lr: jax.Array,
+                        buf_scales: tuple, wvecs: tuple,
+                        inv_total: jax.Array, lr: jax.Array,
                         *, impl: str, mesh=None) -> Params:
     # buf_leaves: one tuple of (rows, size) matrices per buffer, leaf order
     # matching global_params.  Keeping operands 2-D end-to-end is what lets
     # every weighted row-reduction lower to a BLAS/MXU matmul.  ``mesh``
     # (static, a jax.sharding.Mesh) shards every row-reduction over its
     # ``dp`` axis — see ``kernels.fed_reduce.ops.fed_reduce``.
+    # ``buf_scales``: per buffer, either None (f32 wire) or one (rows,) f32
+    # scale column per leaf (int8 wire) — fed_reduce folds the scales into
+    # the weight vector, so quantized buffers reduce without ever
+    # materializing a dense f32 copy of the stack.
     weighted_sum = None  # list of (size,) f32 unnormalized weighted sums
-    for leaves2d, w in zip(buf_leaves, wvecs):
-        parts = [fed_reduce(leaf, w, impl=impl, mesh=mesh)
-                 for leaf in leaves2d]
+    for leaves2d, scales, w in zip(buf_leaves, buf_scales, wvecs):
+        parts = [fed_reduce(leaf, w,
+                            scales=None if scales is None else scales[k],
+                            impl=impl, mesh=mesh)
+                 for k, leaf in enumerate(leaves2d)]
         weighted_sum = parts if weighted_sum is None else [
             a + b for a, b in zip(weighted_sum, parts)]
     g_leaves, treedef = jax.tree.flatten(global_params)
@@ -116,13 +123,18 @@ _FUSED_REDUCE_APPLY_DONATED = jax.jit(
     _fused_reduce_apply, static_argnames=("impl", "mesh"), donate_argnums=(0,))
 
 
-def _partial_reduce(buf_leaves: tuple, wvec: jax.Array, *, impl: str,
-                    mesh=None) -> tuple:
+def _partial_reduce(buf_leaves: tuple, buf_scales, wvec: jax.Array,
+                    *, impl: str, mesh=None) -> tuple:
     # One chunk's streaming partial: the weighted row-sum of every leaf of
-    # one UpdateBuffer.  Dispatched the moment the chunk fully lands, so the
-    # reduction runs (async) while later chunks are still computing.
-    return tuple(fed_reduce(leaf, wvec, impl=impl, mesh=mesh)
-                 for leaf in buf_leaves)
+    # one UpdateBuffer (``buf_scales`` carries the int8 wire's per-leaf
+    # scale columns, or None).  Dispatched the moment the chunk fully
+    # lands, so the reduction runs (async) while later chunks are still
+    # computing.
+    return tuple(
+        fed_reduce(leaf, wvec,
+                   scales=None if buf_scales is None else buf_scales[k],
+                   impl=impl, mesh=mesh)
+        for k, leaf in enumerate(buf_leaves))
 
 
 _PARTIAL_REDUCE = jax.jit(_partial_reduce, static_argnames=("impl", "mesh"))
@@ -160,10 +172,22 @@ class _StreamChunk:
             for leaf in self.buffer.leaves2d)
 
 
+def _scales_of(buf) -> "tuple | None":
+    """A buffer's per-leaf scale columns as a hashable-by-structure tuple
+    (None for the f32 wire) — the ``buf_scales`` pytree fed to the fused
+    reduce jits.  Quantized and f32 buffers may mix freely in one
+    aggregation; each reduces with its own wire format."""
+    scales = getattr(buf, "scales", None)
+    return None if scales is None else tuple(scales)
+
+
 def handles_align(global_params: Params, payloads: list) -> bool:
     """True when every payload is an ``UpdateHandle`` whose buffer layout
     matches ``global_params`` (same treedef, same leaf shapes) — the
-    precondition for the fused zero-copy aggregation path."""
+    precondition for the fused zero-copy aggregation path.  Quantized
+    (``wire="int8"``) buffers align exactly like f32 ones: ``shapes`` always
+    describes what rows *materialize* to, and the fused path dequantizes
+    in-reduction via the buffer's scale columns."""
     if not payloads or not all(isinstance(p, UpdateHandle) for p in payloads):
         return False
     leaves, treedef = jax.tree.flatten(global_params)
@@ -229,9 +253,10 @@ def _fused_fedavg_delta_validated(global_params, handles, weights, *,
             groups[key] = (h.buffer, np.zeros(h.buffer.num_rows, np.float32))
         groups[key][1][h.row] += w
     buf_leaves = tuple(tuple(buf.leaves2d) for buf, _ in groups.values())
+    buf_scales = tuple(_scales_of(buf) for buf, _ in groups.values())
     wvecs = tuple(jnp.asarray(wvec) for _, wvec in groups.values())
     apply = _FUSED_REDUCE_APPLY_DONATED if donate else _FUSED_REDUCE_APPLY
-    return apply(global_params, buf_leaves, wvecs,
+    return apply(global_params, buf_leaves, buf_scales, wvecs,
                  jnp.float32(1.0 / total), jnp.float32(server_lr), impl=impl,
                  mesh=mesh)
 
@@ -405,6 +430,7 @@ class AggregationService:
     def _fire_chunk(self, key: int) -> None:
         ch = self._chunks.pop(key)
         leaves = _PARTIAL_REDUCE(tuple(ch.buffer.leaves2d),
+                                 _scales_of(ch.buffer),
                                  jnp.asarray(ch.weights),
                                  impl=self.reduce_impl, mesh=self.mesh)
         self._partials.append((leaves, float(ch.weights.sum())))
@@ -531,10 +557,11 @@ class AggregationService:
         for h, w in zip(handles, weights):
             wvec(h.buffer)[h.row] += w
         buf_leaves = tuple(tuple(buf.leaves2d) for buf, _ in groups.values())
+        buf_scales = tuple(_scales_of(buf) for buf, _ in groups.values())
         wvecs = tuple(jnp.asarray(v) for _, v in groups.values())
         apply = (_FUSED_REDUCE_APPLY_DONATED if self.donate_params
                  else _FUSED_REDUCE_APPLY)
-        return apply(self.global_params, buf_leaves, wvecs,
+        return apply(self.global_params, buf_leaves, buf_scales, wvecs,
                      jnp.float32(1.0 / total), jnp.float32(self.server_lr),
                      impl=self.reduce_impl, mesh=self.mesh)
 
@@ -559,6 +586,7 @@ class AggregationService:
                 return self.global_params
             self._partials = [
                 (_PARTIAL_REDUCE(tuple(ch.buffer.leaves2d),
+                                 _scales_of(ch.buffer),
                                  jnp.asarray(ch.hits), impl=self.reduce_impl,
                                  mesh=self.mesh),
                  float(ch.hits.sum()))

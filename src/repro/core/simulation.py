@@ -64,6 +64,7 @@ from repro.core.updates import (
     UpdateBuffer,
     UpdateHandle,
     flatten_rows,
+    quantize_rows,
     stacked_spec,
 )
 from repro.core.devicemodel import (
@@ -177,6 +178,69 @@ class _ZeroCopyCohortMixin:
         else:
             leaves2d, metrics = compiled(global_params, batches, rngs)
         return UpdateBuffer(jax.tree.leaves(leaves2d), *spec), metrics
+
+    def _quantized_machinery(self):
+        if getattr(self, "_compiled_q", None) is None:
+            fn = self._cohort_fn
+
+            def q_fn(global_params, batches, rngs, residuals):
+                # Quantization is fused into the cohort jit: the update
+                # leaves are written ONCE, as int8 (rows, size) matrices +
+                # f32 (rows,) scale columns — the quantized wire format —
+                # and the dense f32 stack never round-trips through HBM.
+                # ``residuals`` (None, or one f32 (rows, size) array per
+                # leaf) is the error-feedback memory: the previous round's
+                # quantization error joins this round's update before
+                # quantizing, and the new error is returned to be carried
+                # device-resident into the next round.
+                params, metrics = fn(global_params, batches, rngs)
+                leaves = jax.tree.leaves(flatten_rows(params))
+                if residuals is not None:
+                    leaves = [l.astype(jnp.float32) + r
+                              for l, r in zip(leaves, residuals)]
+                q, s, res = quantize_rows(
+                    leaves, compute_residual=residuals is not None)
+                return tuple(q), tuple(s), res, metrics
+
+            # One jit covers both EF variants: passing residuals=None (an
+            # empty pytree) traces the residual-free graph.
+            self._compiled_q = jax.jit(q_fn)
+        return self._compiled_q
+
+    def run_cohort_quantized(
+        self,
+        global_params: Params,
+        batches: Batch,  # leaves shaped (cohort, ...)
+        rngs: jax.Array,  # (cohort, key)
+        *,
+        residual: "tuple | None" = None,
+        error_feedback: bool = True,
+    ) -> "tuple[UpdateBuffer, dict, tuple | None]":
+        """One fused dispatch producing the chunk's *quantized*
+        ``UpdateBuffer`` (``wire="int8"``: int8 leaves + per-row scale
+        columns) and, with ``error_feedback``, the device-resident residual
+        tuple to carry into this chunk's next round (pass it back as
+        ``residual``).  Round 0 (or a layout change) starts from zero
+        residuals."""
+        self._zero_copy_machinery()  # ensures the spec cache exists
+        compiled = self._quantized_machinery()
+        spec = self._update_spec(global_params, batches, rngs)
+        treedef, shapes, dtypes = spec
+        n = int(rngs.shape[0])
+        if error_feedback:
+            sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+            if residual is None or not (
+                    len(residual) == len(sizes)
+                    and all(tuple(r.shape) == (n, sz)
+                            for r, sz in zip(residual, sizes))):
+                residual = tuple(jnp.zeros((n, sz), jnp.float32)
+                                 for sz in sizes)
+        else:
+            residual = None
+        q, s, res, metrics = compiled(global_params, batches, rngs, residual)
+        buf = UpdateBuffer(list(q), treedef, shapes, dtypes,
+                           wire="int8", scales=list(s))
+        return buf, metrics, (tuple(res) if error_feedback else None)
 
     def _update_spec(self, global_params, batches, rngs):
         key = (jax.tree.structure(global_params),) + tuple(
@@ -536,6 +600,27 @@ class HybridSimulation:
     from round k is consumed before round k+1 runs (realtime dispatch with
     an in-round trigger, as in the quickstart); a handle that outlives its
     round would see its buffer invalidated by the donation.
+
+    ``wire="int8"`` makes quantization a property of the wire: every cohort
+    chunk's update is quantized *inside* the cohort jit
+    (``run_cohort_quantized``) and emitted as an int8 ``UpdateBuffer`` with
+    per-row, per-leaf scale columns — DeviceFlow byte accounting sees the
+    true ~4x-smaller quantized footprint, and aggregation dequantizes
+    in-reduction (``fed_reduce(..., scales=...)``) without ever
+    materializing a dense f32 stack.  ``error_feedback=True`` (default)
+    keeps convergence honest: each chunk's quantization error stays
+    device-resident and is added back into the same chunk's next-round
+    update before quantizing (EF-SGD memory, keyed per task/tier/row-range;
+    cleared automatically if the chunking or layout changes).
+    ``recycle_buffers`` applies only to the f32 wire (int8 leaves have a
+    different storage layout than the donated f32 scratch).
+
+    ``payload_transform`` (a callable ``emission -> emission`` over
+    ``Message``/``ArrivalBatch``) rewrites every emission *before* it is
+    submitted to DeviceFlow — the hook host-side transforms (e.g. top-k
+    compression in ``launch/train.py``) use to ride the columnar plane
+    instead of bypassing it.  Transforms must preserve ``device_ids`` /
+    row counts (arrival times are indexed through them).
     """
 
     def __init__(
@@ -549,10 +634,25 @@ class HybridSimulation:
         recycle_buffers: bool = False,
         stream_chunks: bool = False,
         columnar: bool = True,
+        wire: str = "f32",
+        error_feedback: bool = True,
+        payload_transform: "Callable | None" = None,
     ):
+        if wire not in ("f32", "int8"):
+            raise ValueError(f"unknown wire format {wire!r}")
+        if wire == "int8" and not zero_copy:
+            raise ValueError(
+                "wire='int8' requires zero_copy rounds (quantization is "
+                "fused into the cohort jit)")
         self.zero_copy = zero_copy
         self.recycle_buffers = recycle_buffers
         self.stream_chunks = stream_chunks
+        self.wire = wire
+        self.error_feedback = error_feedback
+        self.payload_transform = payload_transform
+        # Error-feedback memory: (task, tier, global row range) -> residual
+        # leaf tuple, device-resident across rounds.
+        self._ef_residuals: dict = {}
         # Columnar message plane: zero-copy chunks emit ONE ArrivalBatch per
         # cohort chunk (struct-of-arrays columns + the chunk's UpdateBuffer)
         # instead of one Message object per device — the difference between
@@ -694,6 +794,10 @@ class HybridSimulation:
             # partial while the next chunk's cohort is still computing.  The
             # q_i benchmarking rows are held back until materialization.
             held = set(bench_pos.values()) if columnar else mat_set
+            if self.payload_transform is not None:
+                for i in range(n_before, len(emissions)):
+                    if i not in held:
+                        emissions[i] = self.payload_transform(emissions[i])
             fresh = [e for i, e in enumerate(emissions[n_before:],
                                              start=n_before)
                      if i not in held]
@@ -709,7 +813,21 @@ class HybridSimulation:
             # the chunk key identically), so zero_copy is numerics-preserving.
             chunk = take(client_batches, slice(lo, hi))
             rngs = jax.random.split(sub, hi - lo)
-            if self.zero_copy:
+            if self.zero_copy and self.wire == "int8":
+                # Quantized wire: the chunk quantizes inside the cohort jit
+                # and its error-feedback residual stays device-resident,
+                # keyed by (task, tier, global row range) so the same
+                # devices' residual carries into their next round.
+                ef_key = (task_id, id(sim_tier), id_offset + lo,
+                          id_offset + hi)
+                buf, metrics, new_res = sim_tier.run_cohort_quantized(
+                    global_params, chunk, rngs,
+                    residual=self._ef_residuals.get(ef_key),
+                    error_feedback=self.error_feedback)
+                if self.error_feedback:
+                    self._ef_residuals[ef_key] = new_res
+                emit_handles(buf, lo, hi)
+            elif self.zero_copy:
                 # The chunk's stacked output never leaves the device; the
                 # next chunk dispatches while this one still computes.
                 prev = None
@@ -766,6 +884,15 @@ class HybridSimulation:
             if isinstance(m.payload, UpdateHandle):
                 emissions[i] = dataclasses.replace(
                     m, payload=m.payload.materialize())
+        if self.payload_transform is not None:
+            if stream:
+                # Streamed chunks transformed at submit time; only the
+                # held-back benchmarking rows remain.
+                for r in mat_set:
+                    i = bench_pos.get(r, r)
+                    emissions[i] = self.payload_transform(emissions[i])
+            else:
+                emissions = [self.payload_transform(e) for e in emissions]
         if stream and mat_set:
             self.deviceflow.submit_many(
                 [emissions[bench_pos.get(r, r)] for r in sorted(mat_set)])

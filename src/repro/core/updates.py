@@ -35,6 +35,20 @@ host data:
 Buffers are freed by ordinary garbage collection: once the aggregation
 service consumes the round's messages and drops them, no handle references
 the buffer and the device memory is released.
+
+**Quantized wire mode** (``wire="int8"``).  Quantization is a property of
+the wire, not a host-side afterthought: a buffer built with ``wire="int8"``
+stores each leaf as an int8 ``(rows, size)`` matrix plus one f32 ``(rows,)``
+*scale column* (symmetric per-row, per-leaf scaling — ``scale = max|row| /
+127``), produced *inside* the cohort jit by :func:`quantize_rows`.
+``row_nbytes`` reports the true quantized footprint (1 byte per element + 4
+scale bytes per leaf per row), so ``Shelf.total_bytes_*`` and the
+``ArrivalBatch`` nbytes columns show a real ~4x wire cut, not a simulated
+one.  Aggregation never dequantizes to a dense f32 stack:
+``kernels.fed_reduce.fed_reduce(stack, weights, scales=...)`` folds the
+per-row scales into the MXU weight vector (``weights[i]*scales[i]``) and
+reduces the int8 rows directly.  Materialization (handles, checkpoints)
+dequantizes on the way out.
 """
 from __future__ import annotations
 
@@ -58,6 +72,39 @@ def flatten_rows(stacked: Params) -> Params:
                         stacked)
 
 
+def quantize_rows(
+    leaves2d: Sequence[jax.Array], *, compute_residual: bool = False
+) -> tuple[list[jax.Array], list[jax.Array], list[jax.Array] | None]:
+    """Symmetric per-row int8 quantization of ``(rows, size)`` leaves
+    (jit-safe — the round engine folds this into the cohort jit).
+
+    Returns ``(q_leaves, scale_columns, residuals)``: int8 ``(rows, size)``
+    matrices, f32 ``(rows,)`` scale columns (``max|row| / 127``, floored so
+    all-zero rows quantize to zeros instead of NaN), and — when
+    ``compute_residual`` — the f32 quantization error ``x - q*scale`` per
+    leaf, the error-feedback memory carried into the next round's update.
+    """
+    qs: list[jax.Array] = []
+    scales: list[jax.Array] = []
+    residuals: list[jax.Array] = [] if compute_residual else None
+    for leaf in leaves2d:
+        x = leaf.astype(jnp.float32)
+        s = jnp.maximum(jnp.abs(x).max(axis=1), 1e-12) / jnp.float32(127.0)
+        q = jnp.clip(jnp.round(x / s[:, None]), -127, 127).astype(jnp.int8)
+        qs.append(q)
+        scales.append(s)
+        if compute_residual:
+            residuals.append(x - q.astype(jnp.float32) * s[:, None])
+    return qs, scales, residuals
+
+
+def dequantize_rows(q_leaves: Sequence[jax.Array],
+                    scales: Sequence[jax.Array]) -> list[jax.Array]:
+    """Inverse of :func:`quantize_rows`: f32 ``(rows, size)`` leaves."""
+    return [q.astype(jnp.float32) * s[:, None]
+            for q, s in zip(q_leaves, scales)]
+
+
 def stacked_spec(stacked: Params) -> tuple[Any, list[tuple], list[np.dtype]]:
     """(treedef, per-leaf trailing shapes, per-leaf dtypes) of a stacked tree
     (works on concrete arrays and on ``jax.eval_shape`` results alike)."""
@@ -76,13 +123,21 @@ class UpdateBuffer:
     device data — it just records the layout so handles can report real
     payload sizes, aggregation can check alignment against the global
     params, and single rows can materialize on demand.
+
+    ``wire="int8"`` marks a *quantized* buffer: ``leaves2d`` are int8 and
+    ``scales`` carries one f32 ``(rows,)`` scale column per leaf (see the
+    module docstring).  ``shapes``/``dtypes`` still describe what rows
+    *materialize* to (dequantized), while ``row_nbytes`` reports the true
+    quantized wire footprint.
     """
 
     __slots__ = ("leaves2d", "treedef", "shapes", "dtypes", "num_rows",
-                 "row_nbytes", "__weakref__")
+                 "row_nbytes", "wire", "scales", "__weakref__")
 
     def __init__(self, leaves2d: Sequence[jax.Array], treedef,
-                 shapes: Sequence[tuple], dtypes: Sequence[Any]):
+                 shapes: Sequence[tuple], dtypes: Sequence[Any], *,
+                 wire: str = "f32",
+                 scales: "Sequence[jax.Array] | None" = None):
         leaves2d = list(leaves2d)
         if not leaves2d:
             raise ValueError("UpdateBuffer needs at least one leaf")
@@ -101,12 +156,36 @@ class UpdateBuffer:
                     f"shape {shape} needs {math.prod(shape)}")
         if not (len(leaves2d) == len(self.shapes) == len(self.dtypes)):
             raise ValueError("leaves/shapes/dtypes must align")
+        if wire == "f32":
+            if scales is not None:
+                raise ValueError("scales only apply to wire='int8' buffers")
+            self.scales = None
+            row_nbytes = sum(math.prod(s) * d.itemsize
+                             for s, d in zip(self.shapes, self.dtypes))
+        elif wire == "int8":
+            if scales is None or len(list(scales)) != len(leaves2d):
+                raise ValueError(
+                    "wire='int8' needs one (rows,) scale column per leaf")
+            scales = list(scales)
+            for leaf, s in zip(leaves2d, scales):
+                if np.dtype(leaf.dtype) != np.int8:
+                    raise ValueError(
+                        f"wire='int8' leaves must be int8, got {leaf.dtype}")
+                if tuple(s.shape) != (n,):
+                    raise ValueError(
+                        f"scale column must be ({n},), got {s.shape}")
+            self.scales = scales
+            # True quantized footprint: 1 byte/element + one f32 scale per
+            # leaf per row — the bytes this row actually puts on the wire.
+            row_nbytes = sum(math.prod(s) * 1 + np.dtype(sc.dtype).itemsize
+                             for s, sc in zip(self.shapes, scales))
+        else:
+            raise ValueError(f"unknown wire format {wire!r}")
+        self.wire = wire
         self.leaves2d = leaves2d
         self.treedef = treedef
         self.num_rows = n
-        self.row_nbytes = int(sum(
-            math.prod(s) * d.itemsize
-            for s, d in zip(self.shapes, self.dtypes)))
+        self.row_nbytes = int(row_nbytes)
 
     @classmethod
     def from_stacked(cls, stacked: Params) -> "UpdateBuffer":
@@ -127,6 +206,19 @@ class UpdateBuffer:
         return cls(jax.tree.leaves(flatten_rows(stacked)),
                    *stacked_spec(stacked))
 
+    @classmethod
+    def quantized_from_stacked(cls, stacked: Params) -> "UpdateBuffer":
+        """Eagerly quantized ``wire="int8"`` buffer from a stacked pytree.
+
+        The round engine instead fuses :func:`quantize_rows` into the cohort
+        jit (``run_cohort_quantized``); this constructor serves tests,
+        benchmarks and ad-hoc callers.
+        """
+        ref = cls.from_stacked(stacked)
+        q, s, _ = quantize_rows(ref.leaves2d)
+        return cls(q, ref.treedef, ref.shapes, ref.dtypes,
+                   wire="int8", scales=s)
+
     def handle(self, row: int) -> "UpdateHandle":
         return UpdateHandle(self, row)
 
@@ -134,25 +226,36 @@ class UpdateBuffer:
         return [UpdateHandle(self, r) for r in range(self.num_rows)]
 
     def materialize_row(self, row: int) -> Params:
-        """One device's update as a host pytree (blocks on this buffer)."""
+        """One device's update as a host pytree (blocks on this buffer).
+        Quantized buffers dequantize on the way out."""
         if not 0 <= row < self.num_rows:
             raise IndexError(f"row {row} out of range [0, {self.num_rows})")
-        out = [np.asarray(leaf[row]).reshape(shape).astype(dt, copy=False)
-               for leaf, shape, dt in zip(self.leaves2d, self.shapes,
-                                          self.dtypes)]
+        out = []
+        for k, (leaf, shape, dt) in enumerate(
+                zip(self.leaves2d, self.shapes, self.dtypes)):
+            r = np.asarray(leaf[row])
+            if self.wire == "int8":
+                r = r.astype(np.float32) * np.float32(
+                    np.asarray(self.scales[k][row]))
+            out.append(r.reshape(shape).astype(dt, copy=False))
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
     def materialize(self) -> Params:
-        """The whole stacked update as a host pytree."""
-        out = [np.asarray(leaf).reshape((self.num_rows,) + shape)
-               .astype(dt, copy=False)
-               for leaf, shape, dt in zip(self.leaves2d, self.shapes,
-                                          self.dtypes)]
+        """The whole stacked update as a host pytree (dequantized)."""
+        out = []
+        for k, (leaf, shape, dt) in enumerate(
+                zip(self.leaves2d, self.shapes, self.dtypes)):
+            a = np.asarray(leaf)
+            if self.wire == "int8":
+                a = a.astype(np.float32) * np.asarray(self.scales[k])[:, None]
+            out.append(a.reshape((self.num_rows,) + shape)
+                       .astype(dt, copy=False))
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
     def __repr__(self) -> str:
         return (f"UpdateBuffer(rows={self.num_rows}, "
-                f"leaves={len(self.shapes)}, row_nbytes={self.row_nbytes})")
+                f"leaves={len(self.shapes)}, wire={self.wire!r}, "
+                f"row_nbytes={self.row_nbytes})")
 
     # -- checkpointing -----------------------------------------------------
     def state_dict(self) -> dict:
@@ -163,18 +266,28 @@ class UpdateBuffer:
         survive pickling."""
         skeleton = jax.tree_util.tree_unflatten(
             self.treedef, list(range(len(self.shapes))))
-        return {
+        out = {
             "leaves2d": [np.asarray(leaf) for leaf in self.leaves2d],
             "skeleton": skeleton,
             "shapes": [tuple(s) for s in self.shapes],
             "dtypes": [str(d) for d in self.dtypes],
+            "wire": self.wire,
         }
+        if self.wire == "int8":
+            # Quantized buffers checkpoint in wire form: int8 leaves + scale
+            # columns, NOT a dequantized f32 copy.
+            out["scales"] = [np.asarray(s) for s in self.scales]
+        return out
 
     @classmethod
     def from_state_dict(cls, d: dict) -> "UpdateBuffer":
         treedef = jax.tree.structure(d["skeleton"])
+        wire = d.get("wire", "f32")
+        scales = ([jnp.asarray(s) for s in d["scales"]]
+                  if wire == "int8" else None)
         return cls([jnp.asarray(leaf) for leaf in d["leaves2d"]], treedef,
-                   d["shapes"], [np.dtype(s) for s in d["dtypes"]])
+                   d["shapes"], [np.dtype(s) for s in d["dtypes"]],
+                   wire=wire, scales=scales)
 
 
 class UpdateHandle:

@@ -17,8 +17,17 @@ that chain with a single fused reduction per leaf:
 * rows are padded with zero *weights* (not zero rows), so padding never
   contributes to the sum and the caller can slice the column padding off.
 
+The same kernel serves the **fused dequantize-and-reduce** path: an int8
+stack (quantized ``UpdateBuffer`` leaves) streams HBM→VMEM at 1 byte/element
+and is cast to f32 per ``(block_n, block_d)`` block at the MXU input — the
+per-row scales arrive pre-folded into the weight vector (``ops.fed_reduce``
+``scales=``), so dequantization costs zero extra passes and no dense f32
+copy of the stack ever exists.  block_n=256 / block_d=512 are multiples of
+the int8 (32, 128) min tile, so the quantized path keeps the same blocking.
+
 VMEM per step: ``block_n * block_d * 4`` stack bytes + ``block_n * 4`` weight
-bytes + ``block_d * 4`` accumulator ≈ 0.5 MB at block_n=256, block_d=512.
+bytes + ``block_d * 4`` accumulator ≈ 0.5 MB at block_n=256, block_d=512
+(4x less stack traffic from HBM when the stack is int8).
 """
 from __future__ import annotations
 

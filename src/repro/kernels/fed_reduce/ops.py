@@ -20,6 +20,17 @@ the per-shard partial sums combine across the axis.  Rows are zero-weight
 padded up to shard divisibility — padding contributes exactly 0 to the
 weighted sum, so the sharded result matches the unsharded one bit-for-bit
 per shard and within accumulation tolerance across shards.
+
+**Fused dequantize-and-reduce.**  ``fed_reduce(stack, weights, scales=...)``
+consumes a *quantized* int8 stack (``UpdateBuffer(wire="int8")`` leaves):
+``out[d] = sum_i weights[i] * scales[i] * stack[i, d]``.  Because symmetric
+per-row quantization is linear per row, the per-row scales fold straight
+into the weight vector (``weights * scales``) **before** the reduction — the
+MXU/BLAS matmul consumes the int8 rows directly (cast per-block in VMEM on
+the kernel path, convert-fused-into-dot on the jnp ref path), and no dense
+f32 copy of the stack is ever materialized.  The mesh path pads the folded
+weights with zeros exactly like the unquantized path, so padding rows still
+contribute exactly 0.
 """
 from __future__ import annotations
 
@@ -53,10 +64,17 @@ def _fed_reduce_local(stack: jax.Array, weights: jax.Array,
 
 
 def fed_reduce(stack: jax.Array, weights: jax.Array, *,
+               scales: jax.Array | None = None,
                impl: str = "auto", mesh=None,
                axis: str = "dp") -> jax.Array:
     """Weighted row-sum ``sum_i weights[i] * stack[i]`` -> f32 ``stack[0]``
     shape.  ``stack``: (n, ...); ``weights``: (n,).
+
+    ``scales`` (f32 ``(n,)``, from a quantized ``UpdateBuffer`` scale
+    column) selects the fused dequantize-and-reduce variant:
+    ``sum_i weights[i] * scales[i] * stack[i]`` over an int8 stack, with the
+    scales folded into the weight vector so the reduction itself is
+    unchanged (module docstring).
 
     ``mesh`` (a ``jax.sharding.Mesh`` containing ``axis``) distributes the
     row reduction across fleet shards; ``None`` keeps the single-device
@@ -65,6 +83,13 @@ def fed_reduce(stack: jax.Array, weights: jax.Array, *,
     if stack.ndim < 1 or stack.shape[0] != weights.shape[0]:
         raise ValueError(
             f"stack rows {stack.shape} must match weights {weights.shape}")
+    if scales is not None:
+        if scales.shape != weights.shape:
+            raise ValueError(
+                f"scales {scales.shape} must match weights {weights.shape}")
+        # Per-row dequantization is linear, so it folds into the MXU weight
+        # vector; a zero weight still zeroes the whole row.
+        weights = weights.astype(jnp.float32) * scales.astype(jnp.float32)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
     if mesh is None:

@@ -22,6 +22,10 @@ def fed_reduce_ref(stack: jax.Array, weights: jax.Array) -> jax.Array:
     trailing shape in float32 (accumulation dtype; callers cast).
     """
     n = stack.shape[0]
+    # The astype also serves the fused dequantize-and-reduce path (int8
+    # stacks with scales pre-folded into ``weights`` by ``ops.fed_reduce``):
+    # XLA fuses the convert into the dot's operand read, so the int8 stack
+    # is never materialized as a dense f32 copy in HBM.
     flat = stack.reshape(n, -1).astype(jnp.float32)
     out = jnp.tensordot(weights.astype(jnp.float32), flat, axes=1)
     return out.reshape(stack.shape[1:])

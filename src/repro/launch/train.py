@@ -29,7 +29,7 @@ from repro.configs.registry import get_config
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.allocation import solve_allocation
 from repro.core.calibration import RuntimeCalibrator
-from repro.core.deviceflow import DeviceFlow
+from repro.core.deviceflow import ArrivalBatch, DeviceFlow, Message
 from repro.core.devicemodel import GRADES
 from repro.core.federation import (
     AggregationService,
@@ -47,13 +47,17 @@ from repro.core.simulation import (
 from repro.core.strategies import AccumulatedStrategy, TimeIntervalStrategy
 from repro.core.task import GradeSpec, OperatorFlow, Task
 from repro.core.traffic_curves import right_tailed_normal
-from repro.core.updates import UpdateHandle
+from repro.core.updates import UpdateBuffer, UpdateHandle
 from repro.data.tokens import TokenPipeline
 from repro.distribution.sharding import derive_logical_mesh, make_fleet_mesh
 from repro.distribution.steps import build_train_step, init_train_state
 from repro.launch.mesh import make_production_mesh
 from repro.models.registry import get_model
-from repro.optim.compression import topk_compress, topk_init
+from repro.optim.compression import (
+    topk_compress,
+    topk_compress_rows,
+    topk_init,
+)
 from repro.runtime.fault_tolerance import TrainingSupervisor
 
 
@@ -161,21 +165,60 @@ def federated_training(args) -> dict:
                   physical_devices=max(1, n // 4))
         for g, n in zip(grade_names, per_grade)
     ]
-    # Non-compress rounds flow through the columnar plane: run_plan_round
-    # submits one ArrivalBatch per cohort chunk straight into DeviceFlow.
-    # Compression stays on the scalar plane (it is a host-side per-message
-    # payload transform), so the driver submits manually there.
+    # Every round flows through the columnar plane: run_plan_round submits
+    # one ArrivalBatch per cohort chunk straight into DeviceFlow.  Top-k
+    # compression rides it as a ``payload_transform`` (per-emission host
+    # hook) instead of bypassing the plane with a manual scalar submit loop.
+    comp_residuals: dict = {}
+
+    def compress_emission(e):
+        if isinstance(e, ArrivalBatch) and e.buffer is not None:
+            # Bench splits leave multiple batches sharing one buffer with
+            # disjoint row ranges — slice this batch's rows out first.
+            stacked = e.buffer.materialize()
+            stacked = jax.tree.map(
+                lambda l: l[np.asarray(e.rows)], stacked)
+            # Error-feedback memory keyed by the chunk identity (first
+            # device id + width is stable across rounds for a fixed plan).
+            key = (e.task_id, int(e.device_ids[0]), e.n)
+            kept, res, nnz = topk_compress_rows(
+                stacked, comp_residuals.get(key),
+                fraction=args.compress_fraction)
+            comp_residuals[key] = res
+            # Wire size per row = kept (value, int32 index) pairs; floor at
+            # one entry so nbytes=0 never reads as "unset".
+            return ArrivalBatch(
+                e.task_id, e.round_idx,
+                rows=np.arange(e.n, dtype=np.int64),
+                created_t=e.created_t,
+                nbytes=np.maximum(nnz, 1) * 8,
+                num_samples=e.num_samples, device_ids=e.device_ids,
+                buffer=UpdateBuffer.from_stacked(kept))
+        if isinstance(e, Message):
+            payload = (e.payload.materialize()
+                       if isinstance(e.payload, UpdateHandle)
+                       else e.payload)
+            kept, _, stats = topk_compress(
+                payload, topk_init(payload),
+                fraction=args.compress_fraction)
+            return dataclasses.replace(
+                e, payload=kept,
+                size_bytes=max(stats["nonzero"], 1) * 8)
+        return e
+
     sim = HybridSimulation(
         LogicalTier(local_train, cohort_size=cohort,
                     mesh=fleet_mesh, data_axis="dp"),
         tiers={g: DeviceTier(local_train, GRADES[g], seed=args.seed,
                              mesh=fleet_mesh, data_axis="dp")
                for g in grade_names},
-        deviceflow=None if args.compress else flow)
+        deviceflow=flow,
+        wire=args.wire_format,
+        error_feedback=(args.error_feedback == "on"),
+        payload_transform=compress_emission if args.compress else None)
     cal = RuntimeCalibrator()  # Table-I prior until fleets report in
 
     losses = []
-    comp_state = None
     seq = 64
     for rnd in range(args.rounds):
         # Re-solve the split on the latest measured runtimes (paper §IV.B/C).
@@ -201,38 +244,10 @@ def federated_training(args) -> dict:
             [np.asarray(jax.tree.leaves(m)[0]).reshape(-1)
              for m in outcome.client_metrics]).mean()))
 
-        if args.compress:
-            packed = []
-            for m in outcome.messages:
-                # Top-k compression is a host-side payload transform: zero-
-                # copy handle payloads materialize here (the compressed
-                # payload *is* the simulated wire format).
-                payload = (m.payload.materialize()
-                           if isinstance(m.payload, UpdateHandle)
-                           else m.payload)
-                if comp_state is None:
-                    comp_state = topk_init(payload)
-                payload, comp_state, stats = topk_compress(
-                    payload, comp_state, fraction=args.compress_fraction)
-                # Top-k keeps a dense-layout tree, so recompute the wire
-                # size from what a sparse encoding would actually ship
-                # (value + int32 index per kept entry) — otherwise traffic
-                # accounting would report the uncompressed payload size.
-                # Floor at one entry: size_bytes=0 means "unset" to
-                # Message.__post_init__, which would substitute the full
-                # dense payload size for an all-zero update.
-                packed.append(dataclasses.replace(
-                    m, payload=payload,
-                    size_bytes=max(stats["nonzero"], 1) * 8))
-            # Bulk Sorter path: fleet-sampled durations as arrival times.
-            arrivals = flow.clock.now + np.asarray(outcome.arrival_times)
-            flow.submit_many(packed, ts=arrivals)
-            flow.round_complete(task_id, t=float(arrivals.max()))
-            round_end = float(arrivals.max())
-        else:
-            # Columnar plane: run_plan_round already submitted the round's
-            # ArrivalBatches (+ bench messages) with fleet-sampled times.
-            round_end = float(np.max(outcome.arrival_times))
+        # Columnar plane: run_plan_round already submitted the round's
+        # ArrivalBatches (+ bench messages) with fleet-sampled times;
+        # --compress and --wire-format int8 both ride it.
+        round_end = float(np.max(outcome.arrival_times))
         # Rule-based dispatch points extend up to round_seconds past the
         # round end (= the slowest arrival); the run window must cover them
         # or the round's deliveries slip into the next window.
@@ -246,7 +261,10 @@ def federated_training(args) -> dict:
     # Drain capacity-spill dispatches scheduled past the last window.
     flow.run()
     svc.tick(flow.clock.now)
-    return {"losses": losses, "aggregations": len(svc.history)}
+    shelf = flow.shelf(task_id)
+    return {"losses": losses, "aggregations": len(svc.history),
+            "wire_bytes_received": shelf.total_bytes_received,
+            "wire_bytes_dispatched": shelf.total_bytes_dispatched}
 
 
 class _TaskRouter:
@@ -415,6 +433,14 @@ def main(argv=None):
                          "fleet mesh with this many data shards (0 = off)")
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--compress-fraction", type=float, default=0.01)
+    ap.add_argument("--wire-format", choices=("f32", "int8"), default="f32",
+                    help="update wire format: int8 fuses symmetric per-row "
+                         "quantization into the cohort jit (~4x fewer bytes "
+                         "per round) with dequantize-and-reduce aggregation")
+    ap.add_argument("--error-feedback", choices=("on", "off"), default="on",
+                    help="carry int8 quantization residuals device-resident "
+                         "across rounds (EF-SGD); only affects "
+                         "--wire-format int8")
     ap.add_argument("--checkpoint-dir", default="artifacts/ckpt")
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=1)

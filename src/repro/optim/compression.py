@@ -9,14 +9,25 @@ can carry compressed payloads:
   entries per tensor; the residual is fed back into the next round's update
   (memory of the compressor keeps convergence);
 * **int8 quantization** — symmetric per-tensor scaling.
+
+Both remain *host transforms*.  :func:`topk_compress` is the per-message
+scalar form; :func:`topk_compress_rows` is its columnar (stacked) form — one
+vectorized per-row top-k over a whole cohort chunk, so compressed rounds
+ride the columnar message plane (``HybridSimulation(payload_transform=...)``)
+instead of bypassing it.  The *fused* wire-level path — int8 quantization
+folded into the cohort jit with dequantize-and-reduce aggregation — lives in
+``core.updates`` (``UpdateBuffer(wire="int8")``, ``quantize_rows``) and
+``kernels.fed_reduce`` and never round-trips through the host at all.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Params = Any
 
@@ -29,6 +40,16 @@ class TopKState:
 def topk_init(params: Params) -> TopKState:
     return TopKState(residual=jax.tree.map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+@jax.jit
+def _nnz_and_total(tree: Params) -> tuple[jax.Array, jax.Array]:
+    # One fused reduction over every leaf — a single host sync for the
+    # stats, instead of one blocking int() per leaf.
+    leaves = jax.tree.leaves(tree)
+    nz = sum(jnp.count_nonzero(l) for l in leaves)
+    total = sum(l.size for l in leaves)
+    return nz, jnp.asarray(total)
 
 
 def topk_compress(
@@ -50,12 +71,60 @@ def topk_compress(
                         is_leaf=lambda t: isinstance(t, tuple))
     resid = jax.tree.map(lambda t: t[1], pairs,
                          is_leaf=lambda t: isinstance(t, tuple))
-    nz = sum(int(jnp.count_nonzero(x)) for x in jax.tree.leaves(kept))
-    total = sum(x.size for x in jax.tree.leaves(kept))
+    nz, total = map(int, jax.device_get(_nnz_and_total(kept)))
     return kept, TopKState(residual=resid), {
         "nonzero": nz, "total": total,
         "compression_ratio": total / max(nz, 1),
     }
+
+
+@functools.partial(jax.jit, static_argnames=("fraction",))
+def _topk_rows(leaves2d: tuple, residuals, fraction: float):
+    # Vectorized per-row top-k over (rows, size) leaves: one lax.top_k per
+    # leaf covers every device in the chunk.  ``residuals`` is None (no
+    # error-feedback memory yet) or one f32 (rows, size) array per leaf.
+    kept, new_res = [], []
+    nnz_rows = None
+    for k_idx, leaf in enumerate(leaves2d):
+        uf = leaf.astype(jnp.float32)
+        if residuals is not None:
+            uf = uf + residuals[k_idx]
+        k = max(1, int(uf.shape[1] * fraction))
+        thresh = jax.lax.top_k(jnp.abs(uf), k)[0][:, -1:]
+        keep = jnp.where(jnp.abs(uf) >= thresh, uf, 0.0)
+        kept.append(keep.astype(leaf.dtype))
+        new_res.append(uf - keep)
+        nnz = jnp.count_nonzero(keep, axis=1)
+        nnz_rows = nnz if nnz_rows is None else nnz_rows + nnz
+    return tuple(kept), tuple(new_res), nnz_rows
+
+
+def topk_compress_rows(
+    stacked: Params, residual: "tuple | None" = None, *,
+    fraction: float = 0.01,
+) -> tuple[Params, tuple, np.ndarray]:
+    """Columnar :func:`topk_compress`: per-row top-k over a *stacked* update
+    (pytree leaves shaped ``(rows, ...)``, one row per device).
+
+    Returns ``(kept stacked tree, residual, per-row nonzero counts)``.
+    ``residual`` is the error-feedback memory as a tuple of f32
+    ``(rows, size)`` arrays — pass the returned tuple back on the same
+    chunk's next round (``None`` starts from zero).  The nonzero counts are
+    what a sparse encoding ships per row (value + index pairs), i.e. the
+    per-row wire size is ``counts * 8``.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    shapes = [tuple(l.shape) for l in leaves]
+    leaves2d = tuple(l.reshape(l.shape[0], -1) for l in leaves)
+    if residual is not None and not (
+            len(residual) == len(leaves2d)
+            and all(tuple(r.shape) == tuple(l.shape)
+                    for r, l in zip(residual, leaves2d))):
+        residual = None  # layout changed: restart the compressor memory
+    kept2d, new_res, nnz_rows = _topk_rows(leaves2d, residual, fraction)
+    kept = jax.tree_util.tree_unflatten(
+        treedef, [k.reshape(s) for k, s in zip(kept2d, shapes)])
+    return kept, tuple(new_res), np.asarray(nnz_rows)
 
 
 def int8_quantize(update: Params) -> tuple[Params, Params]:
@@ -81,4 +150,18 @@ def int8_dequantize(q: Params, scales: Params, like: Params) -> Params:
 
 
 def payload_bytes(tree: Params) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    """Wire bytes of a payload tree — what actually crosses the wire.
+
+    A quantized payload is the ``(q, scales)`` *pair*; pass the pair and the
+    scale bytes are counted alongside the int8 values (a bare ``q`` tree
+    undercounts the wire by one scale per tensor).  Leaves without an array
+    protocol (Python scalars — e.g. scales pulled through ``float()``) are
+    counted at their array footprint instead of being dropped.
+    """
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if hasattr(x, "size") and hasattr(x, "dtype"):
+            total += int(x.size) * np.dtype(x.dtype).itemsize
+        else:
+            total += np.asarray(x).nbytes
+    return total
