@@ -58,8 +58,21 @@ from repro.core.simulation import (
     LogicalTier,
     RoundPlan,
 )
+from repro.core.serving import (
+    ContinuousBatchingEngine,
+    ContinuousServer,
+    RequestRecord,
+    ServeCostModel,
+    ServingReport,
+)
 from repro.core.task import GradeSpec, OperatorFlow, Task, TaskQueue, register_operator
-from repro.core.traffic_curves import TrafficCurve, right_tailed_normal, table2_curves
+from repro.core.traffic_curves import (
+    TrafficCurve,
+    arrival_quantiles,
+    diurnal,
+    right_tailed_normal,
+    table2_curves,
+)
 
 __all__ = [
     "AllocationResult", "GradeRuntime", "fixed_ratio_allocation",
@@ -77,5 +90,8 @@ __all__ = [
     "AccumulatedStrategy", "DispatchPoint", "TimeIntervalStrategy",
     "TimePointStrategy", "discretize_curve",
     "GradeSpec", "OperatorFlow", "Task", "TaskQueue", "register_operator",
-    "TrafficCurve", "right_tailed_normal", "table2_curves",
+    "ContinuousBatchingEngine", "ContinuousServer", "RequestRecord",
+    "ServeCostModel", "ServingReport",
+    "TrafficCurve", "arrival_quantiles", "diurnal", "right_tailed_normal",
+    "table2_curves",
 ]

@@ -347,6 +347,10 @@ class TaskExecution:
     # Reclamation marked by a higher-priority arrival / pool shrink; applied
     # (refreeze-down or pause) at this task's next round-event boundary.
     pending_shrink: dict[str, tuple[int, int]] | None = None
+    # Admission cost-model audit trail (``preemption_cost_model=True``): one
+    # entry per judged preemption attempt against this task —
+    # {"t", "preemptor", "benefit_s", "cost_s", "preempted"}.
+    preemption_decisions: list[dict] = dataclasses.field(default_factory=list)
     paused_t: float | None = None  # when the current pause began
     queued_s: float = 0.0  # total virtual time spent waiting in the queue
     running_s: float = 0.0  # total virtual time spent RUNNING (grant held)
@@ -453,6 +457,7 @@ class TaskEngine:
         clock: VirtualClock | None = None,
         elastic: bool = True,
         preemptive: bool = False,
+        preemption_cost_model: bool = False,
         duration_rng=None,
         on_round_complete: Callable[[Task, int], None] | None = None,
         on_task_complete: Callable[[TaskExecution], None] | None = None,
@@ -467,6 +472,7 @@ class TaskEngine:
         self.clock = clock or VirtualClock()
         self.elastic = elastic
         self.preemptive = preemptive
+        self.preemption_cost_model = preemption_cost_model
         self.on_round_complete = on_round_complete
         self.on_task_complete = on_task_complete
         self.queue = TaskQueue()
@@ -619,9 +625,15 @@ class TaskEngine:
         return tot
 
     def _mark_shrinks(self, deficit: dict[str, list[int]],
-                      victims: Iterable[TaskExecution]) -> None:
+                      victims: Iterable[TaskExecution],
+                      judge: Callable[[TaskExecution,
+                                       dict[str, tuple[int, int]]],
+                                      bool] | None = None) -> None:
         """Spread ``deficit`` across ``victims`` as pending shrinks (applied
-        at each victim's next round-event boundary)."""
+        at each victim's next round-event boundary).  ``judge`` — the
+        preemption admission cost model — may veto a victim's marked take;
+        the vetoed share stays in the deficit for later victims (or goes
+        unmet: partial preemption is still progress)."""
         for ex in victims:
             if not deficit:
                 return
@@ -633,17 +645,22 @@ class TaskEngine:
                 tb, tp = min(gb - pb, db), min(gp - pp, dp)
                 if tb or tp:
                     take[g] = (tb, tp)
-                    db, dp = db - tb, dp - tp
+            if not take:
+                continue
+            if judge is not None and not judge(ex, take):
+                continue
+            for g, (tb, tp) in take.items():
+                db, dp = deficit[g]
+                db, dp = db - tb, dp - tp
                 if db <= 0 and dp <= 0:
                     deficit.pop(g)
                 else:
                     deficit[g] = [db, dp]
-            if take:
-                merged = dict(ex.pending_shrink or {})
-                for g, (tb, tp) in take.items():
-                    ob, op = merged.get(g, (0, 0))
-                    merged[g] = (ob + tb, op + tp)
-                ex.pending_shrink = merged
+            merged = dict(ex.pending_shrink or {})
+            for g, (tb, tp) in take.items():
+                ob, op = merged.get(g, (0, 0))
+                merged[g] = (ob + tb, op + tp)
+            ex.pending_shrink = merged
 
     def _mark_preemption(self, task: Task,
                          held: Mapping[str, tuple[int, int]] | None = None,
@@ -673,7 +690,68 @@ class TaskEngine:
              and ex.task.task_id != task.task_id
              and ex.task.priority < task.priority),
             key=lambda ex: (ex.task.priority, -ex.started_t, -ex.task.task_id))
-        self._mark_shrinks(deficit, victims)
+        judge = (self._preemption_judge(task, victims)
+                 if self.preemption_cost_model else None)
+        self._mark_shrinks(deficit, victims, judge)
+
+    # -- preemption admission cost model -------------------------------------
+    def _preemption_judge(self, task: Task, victims: list[TaskExecution]):
+        """Admission cost model (``preemption_cost_model=True``): preempt a
+        victim only when the preemptor's priority-weighted benefit exceeds
+        the victim's priority-weighted re-timed lost work.
+
+        *Benefit* — the wait the preemptor avoids: without preemption it
+        queues until the earliest natural completion among the candidate
+        victims, weighted by its priority.  *Cost* — what the victim loses:
+        its remaining rounds re-timed on the shrunken grant (solved through
+        the allocator), or, for a full pause, the span it sits paused (the
+        preemptor's own estimated runtime), weighted by the victim's
+        priority.  Every judged attempt is logged on the victim's
+        ``TaskExecution.preemption_decisions``.
+        """
+        waits = [max(ex.task.rounds - ex.rounds_done, 0)
+                 * ex.allocation.makespan for ex in victims]
+        wait_s = min((w for w in waits if w > 0), default=0.0)
+        benefit = max(task.priority, 1) * wait_s
+
+        def judge(ex: TaskExecution,
+                  take: dict[str, tuple[int, int]]) -> bool:
+            cost = self._shrink_cost_s(task, ex, take)
+            ok = benefit > cost
+            ex.preemption_decisions.append({
+                "t": self.clock.now, "preemptor": task.task_id,
+                "benefit_s": benefit, "cost_s": cost, "preempted": ok})
+            return ok
+
+        return judge
+
+    def _shrink_cost_s(self, task: Task, ex: TaskExecution,
+                       take: dict[str, tuple[int, int]]) -> float:
+        """Victim's re-timed lost work if ``take`` is reclaimed from it."""
+        remaining = max(ex.task.rounds - ex.rounds_done, 0)
+        old_span = ex.allocation.makespan
+        pending = ex.pending_shrink or {}
+        new_grant = {
+            g: (max(0, b - pending.get(g, (0, 0))[0]
+                    - take.get(g, (0, 0))[0]),
+                max(0, p - pending.get(g, (0, 0))[1]
+                    - take.get(g, (0, 0))[1]))
+            for g, (b, p) in ex.grant.items()
+        }
+        weight = max(ex.task.priority, 1)
+        if any(b or p for b, p in new_grant.values()):
+            try:
+                new_span = self._solve(ex.task, new_grant).makespan
+                return weight * remaining * max(new_span - old_span, 0.0)
+            except ValueError:
+                pass  # infeasible shrink — the victim would pause instead
+        # Full pause: the victim's lost work is the span it sits paused,
+        # i.e. the preemptor's own estimated runtime on its full demand.
+        try:
+            pre_span = self._solve(task, task.demand()).makespan
+        except ValueError:
+            pre_span = old_span
+        return weight * task.rounds * pre_span
 
     def _reclaim_deficit(self) -> None:
         """Mark shrinks that pay down a ``scale(reclaim=True)`` pool deficit
@@ -914,6 +992,8 @@ class TaskEngine:
                 "pending_shrink": (
                     None if ex.pending_shrink is None
                     else {g: list(bp) for g, bp in ex.pending_shrink.items()}),
+                "preemption_decisions": [dict(d)
+                                         for d in ex.preemption_decisions],
                 "paused_t": ex.paused_t,
                 "queued_s": ex.queued_s,
                 "running_s": ex.running_s,
@@ -1002,6 +1082,8 @@ class TaskEngine:
                     None if pending is None
                     else {g: (int(bp[0]), int(bp[1]))
                           for g, bp in pending.items()}),
+                preemption_decisions=[
+                    dict(d) for d in enc.get("preemption_decisions", [])],
                 paused_t=(None if enc.get("paused_t") is None
                           else float(enc["paused_t"])),
                 queued_s=float(enc.get("queued_s", 0.0)),

@@ -60,6 +60,62 @@ def table2_curves() -> tuple[TrafficCurve, ...]:
     )
 
 
+def diurnal(day_s: float = 86400.0, *, trough: float = 0.12,
+            peaks: tuple[tuple[float, float, float], ...] = (
+                (0.36, 0.055, 0.75), (0.82, 0.075, 1.0)),
+            days: float = 1.0, name: str = "diurnal") -> TrafficCurve:
+    """Double-peaked diurnal access-load curve (million-user serving shape).
+
+    ``peaks`` are ``(center, width, amplitude)`` Gaussian bumps in
+    day-fraction units (defaults: a morning shoulder and a taller evening
+    peak) on a ``trough`` base rate — the "fluctuating access load" profile
+    SimDC's traffic controller replays against the cloud (§I challenge 2).
+    The curve is periodic, so ``days > 1`` spans multiple days.
+    """
+    if not 0.0 <= trough:
+        raise ValueError("trough must be non-negative")
+
+    def fn(t: float) -> float:
+        x = (t / day_s) % 1.0
+        v = trough
+        for c, w, a in peaks:
+            # Wrap-around distance so a peak near midnight stays smooth.
+            dx = min(abs(x - c), 1.0 - abs(x - c))
+            v += a * math.exp(-0.5 * (dx / w) ** 2)
+        return v
+
+    return TrafficCurve(name, fn, 0.0, day_s * days)
+
+
+def arrival_quantiles(curve: TrafficCurve, n: int,
+                      duration_s: float | None = None,
+                      *, samples: int = 4096) -> "list[float]":
+    """Deterministic request arrival times shaped by ``curve``.
+
+    Places ``n`` arrivals at the equal-AUC quantiles of the curve (inverse
+    CDF at ``(i + 0.5) / n``), scaled onto ``[0, duration_s]`` (defaults to
+    the curve's own domain span).  Deterministic by construction — the same
+    trace drives every serving mode in a comparison.
+    """
+    import numpy as np
+    if n < 0:
+        raise ValueError("n must be non-negative")
+    if n == 0:
+        return []
+    ts = np.linspace(curve.lo, curve.hi, samples + 1)
+    ys = np.array([curve(float(t)) for t in ts])
+    seg = 0.5 * (ys[1:] + ys[:-1]) * np.diff(ts)
+    cdf = np.concatenate([[0.0], np.cumsum(seg)])
+    if cdf[-1] <= 0.0:
+        raise ValueError("curve has zero area — cannot place arrivals")
+    cdf /= cdf[-1]
+    q = (np.arange(n) + 0.5) / n
+    t_curve = np.interp(q, cdf, ts)
+    span = curve.hi - curve.lo
+    scale = (span if duration_s is None else duration_s) / span
+    return [float((t - curve.lo) * scale) for t in t_curve]
+
+
 def piecewise(segments: list[tuple[float, float, Callable[[float], float]]],
               name: str = "piecewise") -> TrafficCurve:
     """Piecewise-continuous curve from ``(lo, hi, fn)`` segments (paper allows

@@ -41,7 +41,11 @@ def _decode_impl(q, k_cache, v_cache, lengths, scale, b, kv, g, d):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v_cache,
                    preferred_element_type=jnp.float32)
-    return o.reshape(b, kv * g, d).astype(q.dtype)
+    o = o.reshape(b, kv * g, d).astype(q.dtype)
+    # length-0 rows (a retired / never-filled KV-arena slot): the all-masked
+    # softmax degenerates to uniform weights over garbage — return exact
+    # zeros instead, matching the Pallas kernel's empty-accumulator output.
+    return jnp.where(lengths[:, None, None] > 0, o, jnp.zeros_like(o))
 
 
 def decode_attention_partial(
