@@ -1269,6 +1269,114 @@ def quantized_wire() -> list[Row]:
     return rows_out
 
 
+def _workers_bench_tiers(cohort=32, seed=3):
+    """Module-level so spawn'ed pool workers can unpickle it by reference."""
+    from repro.core.simulation import DeviceTier, LogicalTier
+
+    local = ctr_lib.make_local_train_fn(lr=1e-2, epochs=2)
+    return (LogicalTier(local, cohort_size=cohort),
+            {"High": DeviceTier(local, GRADES["High"], seed=seed,
+                                cohort_size=cohort)})
+
+
+def workers_round() -> list[Row]:
+    """Multi-process fleet execution vs the in-process columnar round.
+
+    The same federated CTR round — cohort chunks -> struct-of-arrays
+    ``ArrivalBatch``es -> shelf -> fused aggregation — runs once in-process
+    and once per pool size, with chunk execution sharded across spawned
+    worker processes and results returning through shared-memory segments.
+    Each configuration runs the identical chunk plan, so final params and
+    wire-byte counters must match the inline run bit-for-bit.
+
+    Claim: at 4 workers on a >=4-core host the pooled round clears 2x the
+    inline device-messages/s; on smaller hosts (CI containers pinned to 1-2
+    cores) spawn+compile overhead dominates and the claim degrades to the
+    equivalence gate — bit-identical params and exact byte accounting.
+    """
+    import os as _os
+
+    from repro.core.simulation import HybridSimulation
+    from repro.runtime.workers import WorkerSpec
+
+    quick = common.QUICK
+    n, rpd, dim, cohort = (256, 8, 32, 32) if quick else (1024, 8, 64, 64)
+    pool_sizes = (2,) if quick else (2, 4)
+    repeats = 2 if quick else 3
+    try:
+        cores = len(_os.sched_getaffinity(0))
+    except AttributeError:  # non-Linux
+        cores = _os.cpu_count() or 1
+
+    data = make_federated_ctr(num_devices=n, records_per_device=rpd,
+                              dim=dim, seed=0)
+    params0 = ctr_lib.lr_init(jax.random.PRNGKey(0), dim)
+    X, Y, counts = data.stacked_shards(np.arange(n), rpd)
+    mask = (np.arange(rpd)[None] < counts[:, None]).astype(np.float32)
+    batches = {"x": jnp.asarray(X), "y": jnp.asarray(Y),
+               "mask": jnp.asarray(mask)}
+    num_logical = cohort  # one logical chunk, the rest device chunks
+
+    rows_out: list[Row] = []
+    results: dict[int, tuple] = {}
+    for w in (0,) + pool_sizes:
+        svc = AggregationService(
+            params0, trigger=SampleThresholdTrigger(int(counts.sum())))
+        flow = DeviceFlow(svc, seed=0)
+        flow.register_task(0, AccumulatedStrategy(thresholds=(1,)))
+        logical, tiers = _workers_bench_tiers(cohort)
+        kw = ({} if w == 0 else dict(
+            workers=w, worker_spec=WorkerSpec(
+                _workers_bench_tiers, kwargs=dict(cohort=cohort))))
+        sim = HybridSimulation(logical, tiers=tiers, deviceflow=flow, **kw)
+        rnd = [0]
+
+        def one_round():
+            sim.run_round(0, rnd[0], svc.global_params, batches, counts,
+                          num_logical, jax.random.PRNGKey(rnd[0]))
+            flow.run(1e12)
+            svc.tick(flow.clock.now)
+            rnd[0] += 1
+
+        # warmup covers worker spawn + per-worker cohort jit; every config
+        # runs the same 1+repeats rounds so final params stay comparable.
+        _, stat = timed(one_round, warmup=1, repeats=repeats)
+        dt = float(stat) / 1e6
+        shelf = flow.shelf(0)
+        results[w] = (n / dt, jax.device_get(svc.global_params),
+                      shelf.total_bytes_dispatched)
+        stats = dict(sim.pool.stats) if sim.pool is not None else {}
+        sim.close()
+        label = "inline" if w == 0 else f"pool_w{w}"
+        extra = (f";segments={stats['segments_created']}"
+                 f";segment_reuses={stats['segment_reuses']}"
+                 f";shipped_mb={stats['bytes_shipped'] / 1e6:.1f}"
+                 if stats else "")
+        rows_out.append(Row(
+            f"workers_round/{label}_{n}", stat,
+            f"worker_device_messages_per_s={n / dt:.0f};"
+            f"aggregations={len(svc.history)}{extra}"))
+
+    base_rate, base_params, base_bytes = results[0]
+    bit_identical = all(
+        results[w][2] == base_bytes
+        and all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(results[w][1]),
+                                jax.tree.leaves(base_params)))
+        for w in pool_sizes)
+    best = max(pool_sizes)
+    speedup = results[best][0] / base_rate
+    # The >=2x scale-up claim needs real cores to shard across; below that
+    # the gate is correctness (the speedup still gets reported and diffed).
+    gate_perf = cores >= 4 and best >= 4
+    ok = bit_identical and (speedup >= 2.0 if gate_perf else True)
+    rows_out.append(Row(
+        "workers_round/claim_scaleup", 0.0,
+        f"cores={cores};workers={best};speedup={speedup:.2f};"
+        f"perf_gated={gate_perf};bit_identical={bit_identical};ok={ok}"))
+    return rows_out
+
+
 ALL_BENCHMARKS = (
     table1_device_metrics,
     fig6_hybrid_accuracy,
@@ -1279,6 +1387,7 @@ ALL_BENCHMARKS = (
     round_pipeline,
     million_device_round,
     quantized_wire,
+    workers_round,
     multi_task_schedule,
     multi_task_preemption,
     continuous_serving,

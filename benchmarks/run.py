@@ -32,13 +32,15 @@ from benchmarks.paper_benchmarks import ALL_BENCHMARKS  # noqa: E402
 
 QUICK_BENCHMARKS = ("fig8_device_tier_batched", "multi_grade_round",
                     "round_pipeline", "million_device_round",
-                    "quantized_wire", "multi_task_schedule",
-                    "multi_task_preemption", "continuous_serving")
+                    "quantized_wire", "workers_round",
+                    "multi_task_schedule", "multi_task_preemption",
+                    "continuous_serving")
 
 # Throughput-ish metrics worth tracking across PRs (higher is better except
 # slowdown/makespan_s/queueing_delay_s; the diff just reports the ratio
 # either way).
-DIFF_METRICS = ("devices_per_s", "device_messages_per_s", "speedup",
+DIFF_METRICS = ("devices_per_s", "device_messages_per_s",
+                "worker_device_messages_per_s", "speedup",
                 "slowdown", "per_device_us", "makespan_s",
                 "queueing_delay_s", "bytes_per_round", "loss_drift_pct",
                 "p99_latency_s", "goodput_rps")

@@ -335,3 +335,51 @@ print(f"serving: fixed p50={rep_fixed.p50_latency_s * 1e3:.1f}ms "
       f"(p99 cut {rep_fixed.p99_latency_s / rep_cont.p99_latency_s:.0f}x, "
       f"peak occupancy {occ10}/{eng10.slots}, "
       f"token_identical={same_tokens})")
+
+# 11. Multi-process fleet execution (PR 9): ``launch/train.py --workers N``
+#     shards cohort execution across N spawned worker processes, each running
+#     its own jitted cohort loop, while the coordinator keeps the TaskEngine,
+#     DeviceFlow, and AggregationService on the authoritative VirtualClock:
+#
+#         python -m repro.launch.train --mode federated --workers 4
+#         python -m repro.launch.train --mode federated --workers 4 \
+#             --wire-format int8        # quantized transport, still bit-exact
+#
+#     Chunk results ship back as the SAME struct-of-arrays ArrivalBatch
+#     records as in-process rounds — the UpdateBuffer leaves travel through
+#     multiprocessing.shared_memory segments (a recycled ring, mirroring the
+#     zero-copy donation discipline) with only a slim (rows, created_t,
+#     nbytes, shm_name) header on the pipe, so rounds are bit-identical to
+#     single-process execution and Shelf byte accounting stays exact.
+#
+#     Shared-memory lifetime rules:
+#       * A pooled round's UpdateBuffer leaves are *views* into a worker's
+#         segment.  They stay valid while the buffer object is alive; when
+#         the coordinator drops its last reference (post-aggregation), GC
+#         returns the segment to the worker's free ring for the next round.
+#       * Copy before caching: anything that outlives the round (checkpoint
+#         snapshots, history) must own its arrays — ``materialize()`` /
+#         ``state_dict()`` already copy, so the standard paths are safe.
+#       * ``HybridSimulation.close()`` (or the context-manager form) stops
+#         the pool and unlinks every segment; workers are daemonic, so a
+#         crashed coordinator never leaks processes.
+#
+#     When workers beat threads: client training is jit-compiled Python —
+#     threads serialize on the GIL between dispatches and share one compile
+#     cache lock, while processes give each shard its own interpreter AND
+#     its own XLA thread pool.  Expect ~linear scale-up in device-messages/s
+#     up to the physical core count (see ``benchmarks.run workers_round``);
+#     on a 1-2 core host the spawn+compile overhead dominates and in-process
+#     rounds win.  Worker death mid-round is survivable: the coordinator
+#     re-dispatches the lost chunks to survivors (runtime.fault_tolerance).
+#
+#     Both sides compute the segment layout independently from the update
+#     spec — headers never carry shapes/dtypes.  The layout below is one
+#     8-row int8-wire chunk of a {w: (16,), b: ()} model: two int8 wire
+#     matrices, then one f32 scale column per leaf, each 64-byte aligned.
+from repro.runtime.workers import segment_layout
+
+layout11, nbytes11 = segment_layout([(16,), ()], ["float32", "float32"],
+                                    rows=8, wire="int8")
+print("worker transport segment:", nbytes11, "bytes:",
+      [(off, shape, str(dt)) for off, shape, dt in layout11])

@@ -123,11 +123,17 @@ class Checkpointer:
         ``UpdateBuffer``) anywhere in ``tree`` are materialized to host
         pytrees here — saved state must never contain live device references.
 
-        ``runtime_state`` (optional) is an arbitrary engine snapshot — e.g.
-        ``TaskEngine.state_dict(deviceflow=flow)`` with in-flight scalar
-        messages and columnar batches — pickled to ``runtime.pkl`` inside
-        the step directory after device references are materialized to host
-        arrays.  Restore it with :meth:`restore_runtime_state`.
+        ``runtime_state`` (optional) is an arbitrary engine snapshot — the
+        one-manifest shape is ``TaskEngine.state_dict(deviceflow=flow,
+        fleets=sim.fleets, services={tid: svc})``, which carries scheduled
+        events, in-flight scalar/columnar arrivals, fleet RNG counters and
+        streaming-aggregation partials as ONE atomic unit — pickled to
+        ``runtime.pkl`` inside the step directory after device references
+        are materialized to host arrays.  Restore it with
+        :meth:`restore_runtime_state`; the manifest records which runtime
+        sections the snapshot carries (``runtime_sections``) so tooling can
+        tell a full simulation snapshot from a bare engine one without
+        unpickling.
         """
         leaves, _ = _flatten(materialize_handles(tree))
         tmp = pathlib.Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
@@ -145,6 +151,9 @@ class Checkpointer:
                 "time": time.time(),
                 "extra": _jsonify(extra or {}),
                 "has_runtime_state": runtime_state is not None,
+                "runtime_sections": (sorted(map(str, runtime_state))
+                                     if isinstance(runtime_state, dict)
+                                     else []),
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
             target = self._step_dir(step)

@@ -962,7 +962,8 @@ class TaskEngine:
                     if ex.finished_t is not None), default=0.0)
 
     # -- checkpointing --------------------------------------------------------
-    def state_dict(self, deviceflow=None) -> dict:
+    def state_dict(self, deviceflow=None, *, fleets=None,
+                   services=None) -> dict:
         """Resume-safe engine state (JSON-friendly; no Task objects).
 
         Captures the queue order, every live execution's grant/progress and
@@ -976,6 +977,17 @@ class TaskEngine:
         covering scheduled round events AND in-flight arrivals (including
         columnar ``ArrivalBatch`` segments, whose update buffers are
         materialized to host arrays by ``Shelf.state_dict``).
+
+        ``fleets`` (optional, ``{name: DeviceFleet}`` — e.g.
+        ``HybridSimulation.fleets``) folds every fleet's per-device RNG
+        counters into the same snapshot, and ``services`` (optional,
+        ``{task_id: AggregationService}``) folds in aggregation state
+        including streaming partial sums.  Together this makes ONE manifest
+        the atomic unit of a running simulation — engine events, message
+        plane, fleet randomness, and half-reduced rounds snapshot/restore
+        as a unit instead of as separate ``extra`` entries (the
+        coordinator/worker contract of ``runtime.workers``: workers hold
+        no authoritative state, so this manifest IS the simulation).
         """
         def enc(ex: TaskExecution) -> dict:
             return {
@@ -1020,11 +1032,18 @@ class TaskEngine:
             state["duration_rng"] = self.duration_rng.bit_generator.state
         if deviceflow is not None:
             state["deviceflow"] = deviceflow.state_dict()
+        if fleets is not None:
+            state["fleets"] = {str(name): fleet.state_dict()
+                               for name, fleet in dict(fleets).items()}
+        if services is not None:
+            state["aggregation"] = {int(tid): svc.state_dict()
+                                    for tid, svc in dict(services).items()}
         return state
 
     def load_state_dict(self, state: Mapping,
                         tasks: Iterable[Task],
-                        deviceflow=None) -> None:
+                        deviceflow=None, *, fleets=None,
+                        services=None) -> None:
         """Rebuild engine state from ``state_dict`` output.
 
         ``tasks`` supplies the Task objects referenced by the saved state
@@ -1045,10 +1064,23 @@ class TaskEngine:
         ``deviceflow`` (optional) receives the embedded message-plane state
         when the snapshot carries one (``state_dict(deviceflow=...)``) —
         call ``register_task`` for every task first so dispatchers rebind.
+        ``fleets`` / ``services`` likewise receive the fleet RNG counters
+        and aggregation partials the one-manifest snapshot carries (matched
+        by name / task id; missing sections are ignored for legacy states).
         """
         by_id = {t.task_id: t for t in tasks}
         if deviceflow is not None and "deviceflow" in state:
             deviceflow.load_state_dict(state["deviceflow"])
+        if fleets is not None:
+            for name, fstate in state.get("fleets", {}).items():
+                fleet = dict(fleets).get(name)
+                if fleet is not None:
+                    fleet.load_state_dict(fstate)
+        if services is not None:
+            for tid, sstate in state.get("aggregation", {}).items():
+                svc = dict(services).get(int(tid))
+                if svc is not None:
+                    svc.load_state_dict(sstate)
         self.clock.now = float(state["now"])
         if self.duration_rng is not None and "duration_rng" in state:
             self.duration_rng.bit_generator.state = state["duration_rng"]

@@ -621,6 +621,18 @@ class HybridSimulation:
     compression in ``launch/train.py``) use to ride the columnar plane
     instead of bypassing it.  Transforms must preserve ``device_ids`` /
     row counts (arrival times are indexed through them).
+
+    ``workers=N`` (with ``worker_spec=WorkerSpec(factory, ...)``) shards
+    cohort-chunk execution across N spawned worker processes
+    (``runtime.workers.FleetWorkerPool``), each running its own jitted
+    cohort loop; chunk results return as shared-memory-backed
+    ``UpdateBuffer``s and re-enter the emission pipeline unchanged, so
+    pooled rounds are bit-identical to in-process ones (both wires,
+    error-feedback included) while this coordinator keeps DeviceFlow, fleet
+    sampling, and aggregation on the authoritative clock.  Call ``close()``
+    (or use the context-manager form) to stop the pool and release its
+    segments.  Requires ``zero_copy`` rounds; ``worker_pool=`` injects a
+    pre-built (e.g. delay-instrumented) pool instead.
     """
 
     def __init__(
@@ -637,6 +649,9 @@ class HybridSimulation:
         wire: str = "f32",
         error_feedback: bool = True,
         payload_transform: "Callable | None" = None,
+        workers: int = 0,
+        worker_spec=None,
+        worker_pool=None,
     ):
         if wire not in ("f32", "int8"):
             raise ValueError(f"unknown wire format {wire!r}")
@@ -644,6 +659,25 @@ class HybridSimulation:
             raise ValueError(
                 "wire='int8' requires zero_copy rounds (quantization is "
                 "fused into the cohort jit)")
+        # Multi-process fleet execution (runtime.workers): cohort chunks run
+        # in N worker processes; this coordinator keeps DeviceFlow, fleet
+        # sampling and aggregation on the authoritative clock.  The results
+        # come back as the same columnar UpdateBuffers (shared-memory
+        # backed), so everything downstream is unchanged.
+        self._pool = worker_pool
+        if workers and worker_pool is None:
+            if worker_spec is None:
+                raise ValueError(
+                    "workers=N requires worker_spec=WorkerSpec(factory, ...)"
+                    " — a picklable module-level factory rebuilding "
+                    "(logical, tiers) inside each worker process")
+            if not zero_copy:
+                raise ValueError(
+                    "workers=N requires zero_copy rounds (the transport "
+                    "ships UpdateBuffer leaves)")
+            from repro.runtime.workers import FleetWorkerPool
+
+            self._pool = FleetWorkerPool(worker_spec, workers)
         self.zero_copy = zero_copy
         self.recycle_buffers = recycle_buffers
         self.stream_chunks = stream_chunks
@@ -684,6 +718,29 @@ class HybridSimulation:
                 f"{len(self.tiers)} device tiers configured; "
                 "use sim.tiers[grade]")
         return next(iter(self.tiers.values()))
+
+    @property
+    def pool(self):
+        """The ``FleetWorkerPool`` driving multi-process rounds (or None)."""
+        return self._pool
+
+    @property
+    def fleets(self) -> "dict[str, DeviceFleet]":
+        """Per-grade fleets, keyed by grade name — the shape
+        ``TaskEngine.state_dict(fleets=...)`` folds into the one-manifest
+        runtime checkpoint (fleet RNG counters travel with the engine)."""
+        return {name: tier.fleet for name, tier in self.tiers.items()}
+
+    def close(self) -> None:
+        """Shut down the worker pool (no-op for single-process rounds)."""
+        if self._pool is not None:
+            self._pool.close()
+
+    def __enter__(self) -> "HybridSimulation":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- shared per-grade execution ----------------------------------------
     def _run_split(
@@ -851,28 +908,76 @@ class HybridSimulation:
             if metrics_out is not None:
                 metrics_out.append(metrics)
 
-        # Logical tier: vectorized cohorts (chunked by cohort_size).
+        # The chunk plan IS the rng contract: logical cohorts (chunked by
+        # cohort_size) then device cohorts, one ``jax.random.split`` per
+        # chunk — walked identically whether chunks run inline or across a
+        # worker pool, so multi-process rounds stay bit-identical.
+        chunk_plan: list[tuple] = []
         idx = 0
         while idx < num_logical:
             hi = min(idx + self.logical.cohort_size, num_logical)
             rng, sub = jax.random.split(rng)
-            n_before = len(emissions)
-            run_chunk(self.logical, idx, hi, sub)
-            if stream:
-                stream_chunk(n_before)
+            chunk_plan.append((self.logical, "logical", idx, hi, sub))
             idx = hi
-
         # Device tier: vectorized cohorts through the bf16 backend — one
         # vmapped dispatch per chunk instead of one jit call per device.
         idx = num_logical
         while idx < n_total:
             hi = min(idx + tier.cohort_size, n_total)
             rng, sub = jax.random.split(rng)
-            n_before = len(emissions)
-            run_chunk(tier, idx, hi, sub)
-            if stream:
-                stream_chunk(n_before)
+            chunk_plan.append((tier, tier.grade.name, idx, hi, sub))
             idx = hi
+
+        if self._pool is not None and self.zero_copy:
+            # Multi-process path: ship the plan to the worker pool; chunk
+            # results come back as shared-memory-backed UpdateBuffers and
+            # re-enter the exact emission pipeline below.  Without
+            # streaming, emissions assemble in CHUNK order (bit-identical
+            # to inline); with streaming, in COMPLETION order, overlapping
+            # fed_reduce partials with still-running worker shards.
+            from repro.runtime.workers import ChunkSpec
+
+            specs_by_kind: dict[str, tuple] = {}
+            for sim_tier, kind, lo, hi, _ in chunk_plan:
+                if kind in specs_by_kind:
+                    continue
+                sim_tier._zero_copy_machinery()  # ensures the spec cache
+                abstract = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(
+                        (hi - lo,) + tuple(x.shape[1:]), x.dtype),
+                    client_batches)
+                specs_by_kind[kind] = sim_tier._update_spec(
+                    global_params, abstract,
+                    jax.ShapeDtypeStruct((hi - lo, 2), np.uint32))
+            wchunks = [
+                ChunkSpec(i, kind, lo, hi, np.asarray(sub),
+                          id_offset=id_offset)
+                for i, (_, kind, lo, hi, sub) in enumerate(chunk_plan)]
+
+            def finish(i, buf, metrics):
+                _, _, lo, hi, _ = chunk_plan[i]
+                n_before = len(emissions)
+                emit_handles(buf, lo, hi)
+                if metrics_out is not None:
+                    metrics_out.append(metrics)
+                if stream:
+                    stream_chunk(n_before)
+
+            pooled = self._pool.run_chunks(
+                task_id=task_id, round_idx=round_idx, params=global_params,
+                batches=client_batches, chunks=wchunks,
+                specs_by_kind=specs_by_kind, wire=self.wire,
+                error_feedback=self.error_feedback,
+                on_result=finish if stream else None)
+            if not stream:
+                for i, (buf, metrics) in enumerate(pooled):
+                    finish(i, buf, metrics)
+        else:
+            for sim_tier, _, lo, hi, sub in chunk_plan:
+                n_before = len(emissions)
+                run_chunk(sim_tier, lo, hi, sub)
+                if stream:
+                    stream_chunk(n_before)
 
         # Deferred host materialization: only the q_i benchmarking devices'
         # updates become host pytrees, after the whole grade has dispatched.

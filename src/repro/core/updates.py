@@ -227,7 +227,10 @@ class UpdateBuffer:
 
     def materialize_row(self, row: int) -> Params:
         """One device's update as a host pytree (blocks on this buffer).
-        Quantized buffers dequantize on the way out."""
+        Quantized buffers dequantize on the way out.  Always returns OWNED
+        arrays: a host-resident buffer (e.g. shared-memory views from a
+        multi-process round) must never leak views into storage that is
+        recycled when the buffer is dropped."""
         if not 0 <= row < self.num_rows:
             raise IndexError(f"row {row} out of range [0, {self.num_rows})")
         out = []
@@ -237,17 +240,22 @@ class UpdateBuffer:
             if self.wire == "int8":
                 r = r.astype(np.float32) * np.float32(
                     np.asarray(self.scales[k][row]))
+            elif isinstance(leaf, np.ndarray):
+                r = r.copy()
             out.append(r.reshape(shape).astype(dt, copy=False))
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
     def materialize(self) -> Params:
-        """The whole stacked update as a host pytree (dequantized)."""
+        """The whole stacked update as a host pytree (dequantized; owned
+        arrays — see ``materialize_row``)."""
         out = []
         for k, (leaf, shape, dt) in enumerate(
                 zip(self.leaves2d, self.shapes, self.dtypes)):
             a = np.asarray(leaf)
             if self.wire == "int8":
                 a = a.astype(np.float32) * np.asarray(self.scales[k])[:, None]
+            elif isinstance(leaf, np.ndarray):
+                a = a.copy()
             out.append(a.reshape((self.num_rows,) + shape)
                        .astype(dt, copy=False))
         return jax.tree_util.tree_unflatten(self.treedef, out)
@@ -266,8 +274,13 @@ class UpdateBuffer:
         survive pickling."""
         skeleton = jax.tree_util.tree_unflatten(
             self.treedef, list(range(len(self.shapes))))
+        # Snapshots must own their arrays: np.asarray of a numpy leaf (e.g.
+        # a shared-memory view from a multi-process round) is an alias, and
+        # the backing segment may be recycled before the snapshot persists.
+        own = lambda a: (np.array(a, copy=True) if isinstance(a, np.ndarray)
+                         else np.asarray(a))
         out = {
-            "leaves2d": [np.asarray(leaf) for leaf in self.leaves2d],
+            "leaves2d": [own(leaf) for leaf in self.leaves2d],
             "skeleton": skeleton,
             "shapes": [tuple(s) for s in self.shapes],
             "dtypes": [str(d) for d in self.dtypes],
@@ -276,7 +289,7 @@ class UpdateBuffer:
         if self.wire == "int8":
             # Quantized buffers checkpoint in wire form: int8 leaves + scale
             # columns, NOT a dequantized f32 copy.
-            out["scales"] = [np.asarray(s) for s in self.scales]
+            out["scales"] = [own(s) for s in self.scales]
         return out
 
     @classmethod

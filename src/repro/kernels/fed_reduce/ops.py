@@ -34,6 +34,8 @@ contribute exactly 0.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -42,11 +44,67 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.fed_reduce.fed_reduce import fed_reduce_pallas
 from repro.kernels.fed_reduce.ref import fed_reduce_ref
 
-__all__ = ["fed_reduce", "fed_reduce_ref"]
+__all__ = ["fed_reduce", "fed_reduce_ref", "tuned_blocks"]
+
+# int8 min tile on TPU is (32, 128); f32/bf16 tiles are coarser but (32, 128)
+# stays legal for every dtype the wire formats produce, so it is the blocking
+# floor everywhere.
+_MIN_BLOCK_N = 32
+_MIN_BLOCK_D = 128
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def tuned_blocks(rows: int, size: int, dtype,
+                 *, vmem_budget_bytes: int = 1 << 20) -> tuple[int, int]:
+    """Pick ``(block_n, block_d)`` for ``fed_reduce_pallas`` from the stack
+    shape and wire dtype (mirrors ``decode_attention.ops.tuned_block_k``).
+
+    Each grid step streams one ``(block_n, block_d)`` stack tile at its
+    *wire* width — 1 byte/element for a quantized int8 stack, 2 for bf16,
+    4 for f32 — plus the f32 weight slice and accumulator.  Pick the largest
+    power-of-two blocks whose tile fits the budget (default 1 MiB — a
+    conservative slice of the ~16 MiB VMEM leaving room for
+    double-buffering; f32 lands on the kernel's historical (256, 512)
+    default), growing ``block_n`` first: taller tiles amortize the
+    f32 accumulator re-read across more rows, and an int8 stack affords a
+    4x taller tile than f32 for the same HBM traffic.  Blocks clamp to the
+    padded stack shape so small cohorts stay a single tile instead of
+    padding rows/columns 8x past the data.
+
+    ``FED_REDUCE_BLOCKS="<block_n>,<block_d>"`` in the environment overrides
+    the table outright (bench sweeps, regression pinning).
+    """
+    override = os.environ.get("FED_REDUCE_BLOCKS")
+    if override:
+        try:
+            bn, bd = (int(v) for v in override.split(","))
+        except ValueError:
+            raise ValueError(
+                f"FED_REDUCE_BLOCKS must be 'block_n,block_d', "
+                f"got {override!r}") from None
+        return bn, bd
+    if rows < 1 or size < 1:
+        raise ValueError(f"need rows, size >= 1, got ({rows}, {size})")
+    itemsize = jnp.dtype(dtype).itemsize
+    block_n, block_d = _MIN_BLOCK_N, _MIN_BLOCK_D
+    grow_n = True  # alternate, rows first
+    while True:
+        cand_n, cand_d = (2 * block_n, block_d) if grow_n \
+            else (block_n, 2 * block_d)
+        tile = cand_n * cand_d * itemsize + cand_n * 4 + cand_d * 4
+        if tile > vmem_budget_bytes or cand_n > 1024 or cand_d > 2048:
+            if grow_n:  # rows capped out; try one more column doubling
+                grow_n = False
+                continue
+            break
+        block_n, block_d = cand_n, cand_d
+        grow_n = not grow_n
+    pad_n = max(_MIN_BLOCK_N, 1 << (rows - 1).bit_length())
+    pad_d = max(_MIN_BLOCK_D, 1 << (size - 1).bit_length())
+    return min(block_n, pad_n), min(block_d, pad_d)
 
 
 def _fed_reduce_local(stack: jax.Array, weights: jax.Array,
@@ -56,8 +114,9 @@ def _fed_reduce_local(stack: jax.Array, weights: jax.Array,
     if impl in ("pallas", "pallas_interpret"):
         n = stack.shape[0]
         flat = stack.reshape(n, -1)
+        bn, bd = tuned_blocks(n, flat.shape[1], stack.dtype)
         out = fed_reduce_pallas(
-            flat, weights,
+            flat, weights, block_n=bn, block_d=bd,
             interpret=(impl == "pallas_interpret" or not _on_tpu()))
         return out.reshape(stack.shape[1:])
     raise ValueError(f"unknown impl {impl!r}")

@@ -66,6 +66,33 @@ def make_small_shape(cfg, *, seq_len=128, global_batch=8, microbatches=2):
                        microbatches=microbatches)
 
 
+def _make_local_train(api, cfg, client_lr):
+    """One SGD epoch on the client model — shared between the coordinator's
+    tiers and spawned workers so pooled chunks stay bit-identical."""
+
+    def local_train(params, batch, _rng):
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, batch, cfg)[0])(params)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - client_lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, grads)
+        return new, loss
+
+    return local_train
+
+
+def _federated_worker_tiers(*, arch, grades, seed, client_lr, cohort):
+    """Module-level ``WorkerSpec`` factory (spawn pickles it by reference):
+    rebuilds the coordinator's tiers from plain kwargs inside each worker."""
+    cfg = get_config(arch, smoke=True)
+    api = get_model(cfg)
+    local_train = _make_local_train(api, cfg, client_lr)
+    return (LogicalTier(local_train, cohort_size=cohort),
+            {g: DeviceTier(local_train, GRADES[g], seed=seed)
+             for g in grades})
+
+
 def cloud_training(args) -> dict:
     """Datacenter pretraining loop with checkpoint/restart."""
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -145,14 +172,7 @@ def federated_training(args) -> dict:
             curve=right_tailed_normal(args.sigma), interval=args.round_seconds,
             failure_prob=args.dropout))
 
-    def local_train(params, batch, _rng):
-        loss, grads = jax.value_and_grad(
-            lambda p: api.loss_fn(p, batch, cfg)[0])(params)
-        new = jax.tree.map(
-            lambda p, g: (p.astype(jnp.float32)
-                          - args.client_lr * g.astype(jnp.float32)
-                          ).astype(p.dtype), params, grads)
-        return new, loss
+    local_train = _make_local_train(api, cfg, args.client_lr)
 
     # Grade partition: clients split evenly across the requested grades, one
     # DeviceTier (with its own behavioral fleet) per grade.
@@ -206,6 +226,25 @@ def federated_training(args) -> dict:
                 size_bytes=max(stats["nonzero"], 1) * 8)
         return e
 
+    # --workers N shards cohort execution across N spawned processes
+    # (runtime.workers): each worker runs its own jitted cohort loop and
+    # ships chunk results back through shared-memory segments.  Process
+    # sharding and mesh sharding are alternative scale-out axes — pick one.
+    worker_kw = {}
+    if args.workers:
+        if args.fleet_shards:
+            raise SystemExit(
+                "--workers is incompatible with --fleet-shards: process "
+                "sharding and fleet-mesh sharding are alternative scale-out "
+                "axes")
+        from repro.runtime.workers import WorkerSpec
+        worker_kw = dict(
+            workers=args.workers,
+            worker_spec=WorkerSpec(
+                _federated_worker_tiers,
+                kwargs=dict(arch=args.arch, grades=tuple(grade_names),
+                            seed=args.seed, client_lr=args.client_lr,
+                            cohort=cohort)))
     sim = HybridSimulation(
         LogicalTier(local_train, cohort_size=cohort,
                     mesh=fleet_mesh, data_axis="dp"),
@@ -215,7 +254,8 @@ def federated_training(args) -> dict:
         deviceflow=flow,
         wire=args.wire_format,
         error_feedback=(args.error_feedback == "on"),
-        payload_transform=compress_emission if args.compress else None)
+        payload_transform=compress_emission if args.compress else None,
+        **worker_kw)
     cal = RuntimeCalibrator()  # Table-I prior until fleets report in
 
     losses = []
@@ -262,9 +302,20 @@ def federated_training(args) -> dict:
     flow.run()
     svc.tick(flow.clock.now)
     shelf = flow.shelf(task_id)
-    return {"losses": losses, "aggregations": len(svc.history),
-            "wire_bytes_received": shelf.total_bytes_received,
-            "wire_bytes_dispatched": shelf.total_bytes_dispatched}
+    out = {"losses": losses, "aggregations": len(svc.history),
+           "wire_bytes_received": shelf.total_bytes_received,
+           "wire_bytes_dispatched": shelf.total_bytes_dispatched}
+    if sim.pool is not None:
+        st = sim.pool.stats
+        print(f"workers: {args.workers} chunks {st['chunks']} "
+              f"segments {st['segments_created']} "
+              f"(reused {st['segment_reuses']}) "
+              f"shipped {st['bytes_shipped'] / 1e6:.1f}MB "
+              f"redispatched {st['redispatched_chunks']}", flush=True)
+        out["worker_chunks"] = st["chunks"]
+        out["worker_segment_reuses"] = st["segment_reuses"]
+    sim.close()  # workers are daemonic — explicit close just recycles shm now
+    return out
 
 
 class _TaskRouter:
@@ -428,6 +479,10 @@ def main(argv=None):
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--round-seconds", type=float, default=60.0)
     ap.add_argument("--dropout", type=float, default=0.0)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="shard cohort execution across N worker processes "
+                         "(shared-memory columnar transport; 0 = in-process); "
+                         "federated single-task mode only")
     ap.add_argument("--fleet-shards", type=int, default=0,
                     help="shard cohorts + fed_reduce over a ('dp','mp') "
                          "fleet mesh with this many data shards (0 = off)")

@@ -14,6 +14,15 @@ Three layers, matching the failure domains of a 1000+-node deployment:
    or leave, the allocation ILP is re-solved for the surviving pool and the
    task continues with the new split (the makespan argument of §IV.B holds
    per-round, so re-solving between rounds is optimal-per-round).
+
+4. **Simulation-worker failures** (``runtime.workers``) — a cohort worker
+   process dying mid-round must not hang the coordinator's round barrier:
+   :func:`redispatch_chunks` re-assigns the dead shard's still-pending
+   cohort chunks round-robin over the survivors, and the pool records a
+   :class:`WorkerFailure` per event.  The re-dispatched chunks rerun with
+   their original rng subkeys, so the round's *result* is unchanged — only
+   its wall-clock and (for int8) the dead shard's error-feedback residual
+   (restarted at zero, like a fresh device) pay for the failure.
 """
 from __future__ import annotations
 
@@ -53,6 +62,35 @@ def with_retries(fn: Callable, policy: RetryPolicy = RetryPolicy(),
         raise AssertionError("unreachable")
 
     return wrapped
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerFailure:
+    """One worker-process death observed by a ``FleetWorkerPool`` round
+    barrier: which worker died, which chunk indices were re-dispatched, and
+    who survived to absorb them."""
+
+    worker_id: int
+    chunks: tuple[int, ...]
+    survivors: tuple[int, ...]
+
+
+def redispatch_chunks(chunk_ids, survivors) -> dict[int, list]:
+    """Re-assign a dead worker's pending cohort chunks to the survivors.
+
+    Round-robin over ``survivors`` (stable order) so a burst of failures
+    spreads evenly instead of piling onto one shard.  Raises when nobody is
+    left — the coordinator turns that into a round failure rather than a
+    hang.  Returns ``{survivor_worker_id: [chunk_id, ...]}``.
+    """
+    survivors = list(survivors)
+    if not survivors:
+        raise RuntimeError(
+            "no surviving workers to absorb re-dispatched chunks")
+    assignment: dict[int, list] = {}
+    for i, c in enumerate(sorted(chunk_ids)):
+        assignment.setdefault(survivors[i % len(survivors)], []).append(c)
+    return assignment
 
 
 @dataclasses.dataclass
