@@ -57,6 +57,14 @@ f32 run.  The same knobs ride the training driver:
 ``python -m repro.launch.train --mode federated --wire-format int8
 [--error-feedback off]``.
 
+**Invariants & sanitizers (PR 10).**  Section 12 catalogs the platform's
+load-bearing footguns (2-D buffer leaves, ``keep_unused`` donation, shm
+segment lifetime, virtual-clock-only timing) with their simcheck rule IDs,
+and shows the two enforcement layers: the AST linter
+(``python -m repro.analysis.lint src tests``) and the ``SIMDC_SANITIZE=1``
+runtime sanitizers (transfer-guarded hot paths, use-after-donate poisoning,
+segment-leak audit, clock monotonicity).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -383,3 +391,58 @@ layout11, nbytes11 = segment_layout([(16,), ()], ["float32", "float32"],
                                     rows=8, wire="int8")
 print("worker transport segment:", nbytes11, "bytes:",
       [(off, shape, str(dt)) for off, shape, dt in layout11])
+
+# 12. Invariants & sanitizers (PR 10): the platform's performance story
+#     rests on a handful of easy-to-break invariants.  ``repro.analysis``
+#     enforces them twice — statically (an AST linter, rules R001-R006) and
+#     dynamically (opt-in runtime sanitizers):
+#
+#         PYTHONPATH=src python -m repro.analysis.lint src tests   # static
+#         SIMDC_SANITIZE=1 python -m pytest -q                     # runtime
+#         python -m pytest -q --sanitize                           # same
+#
+#     The catalog of footguns, each with its rule ID:
+#       * R001 — ``jax.jit(..., donate_argnums=...)`` WITHOUT
+#         ``keep_unused=True``: if the traced fn never reads a donated arg,
+#         XLA drops it from the signature and the donation silently no-ops —
+#         the zero-copy recycle path degrades to a fresh allocation per
+#         round with no error anywhere.
+#       * R002 — wall-clock reads (``time.time`` etc.) in simulation-domain
+#         (``core/``) modules: simulated components must stamp time from the
+#         ``VirtualClock`` (``MetricsBus.on_virtual_clock``) or replays stop
+#         being deterministic.
+#       * R003 — host syncs (``int()``/``.item()``/``np.asarray``) inside
+#         ``@hot_path`` functions: one stray sync in the decode loop
+#         serializes the whole dispatch stream.
+#       * R004 — ``state_dict``/``load_state_dict`` key asymmetry: a written
+#         key the reader ignores is state that silently fails to restore.
+#       * R005 — shared-memory segments without a close/unlink/finalize
+#         path (or ``resource_tracker.unregister`` calls): segments outlive
+#         their creators and leak in /dev/shm.
+#       * R006 — 3-D+ reshapes on reduction operands inside cohort jits:
+#         aggregation operands must stay (rows, size) 2-D to lower to one
+#         BLAS/MXU matmul (~40x on CPU XLA).
+#
+#     With ``SIMDC_SANITIZE=1`` the runtime half arms itself: the decode
+#     loop, zero-copy round pipeline and fused aggregation dispatch run
+#     under ``jax.transfer_guard("disallow")`` (implicit host<->device
+#     transfers raise at the offending op), donated ``UpdateBuffer``s are
+#     poisoned so use-after-donate raises ``UseAfterDonateError`` instead of
+#     failing deep in XLA, ``FleetWorkerPool.close()`` audits for pinned
+#     segments, and ``VirtualClock.schedule`` rejects events in the virtual
+#     past.  All of it is a single truthiness check per call when disabled.
+import pathlib
+
+from repro.analysis import lint, sanitizers
+
+findings12 = lint.lint_paths(
+    [pathlib.Path(__file__).resolve().parents[1] / "src"])
+print(f"simcheck lint over src/: {len(findings12)} finding(s)")
+buf12 = UpdateBuffer.from_stacked({"w": jnp.ones((4, DIM))})
+with sanitizers.override(True):
+    sanitizers.poison_donated(buf12)
+    try:
+        buf12.leaves2d
+    except sanitizers.UseAfterDonateError:
+        print("use-after-donate fenced: donated buffer access raises "
+              "UseAfterDonateError instead of a deep XLA error")

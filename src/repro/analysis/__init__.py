@@ -1,0 +1,26 @@
+"""simcheck: project-specific invariant lint + opt-in runtime sanitizers.
+
+Two layers over the same fidelity invariants (ROADMAP "footguns" list):
+
+* ``python -m repro.analysis.lint src tests`` — AST lint, rules R001-R006
+  (:mod:`repro.analysis.lint`).  Pure stdlib; importing it never touches jax.
+* ``SIMDC_SANITIZE=1`` (or ``pytest --sanitize``) — runtime sanitizers
+  (:mod:`repro.analysis.sanitizers`): ``transfer_guard("disallow")`` on the
+  ``@hot_path`` functions, use-after-donate poisoning, worker segment-leak
+  audit, virtual-clock monotonicity.
+
+``hot_path`` lives in :mod:`repro.analysis.sanitizers` and is re-exported
+here lazily so the lint CLI stays jax-free.
+"""
+from __future__ import annotations
+
+__all__ = ["hot_path", "sanitizers"]
+
+
+def __getattr__(name):
+    if name in ("hot_path", "sanitizers"):
+        import importlib
+
+        mod = importlib.import_module("repro.analysis.sanitizers")
+        return mod if name == "sanitizers" else mod.hot_path
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

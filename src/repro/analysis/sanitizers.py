@@ -1,0 +1,160 @@
+"""Opt-in runtime sanitizers for the simulation/serving hot paths.
+
+Enable with ``SIMDC_SANITIZE=1`` in the environment (or ``pytest
+--sanitize``, which sets it).  Everything here is a no-op when disabled, so
+the hot paths pay only a truthiness check per call.
+
+Four sanitizers, each catching a bug class the repo has actually shipped:
+
+* ``@hot_path`` wraps the decode loop, the zero-copy round pipeline, and
+  the fused aggregation dispatch in ``jax.transfer_guard("disallow")``:
+  any *implicit* host<->device transfer (a stray numpy operand reaching a
+  jit, an ``int()`` on a device scalar) raises instead of silently
+  serializing the dispatch stream.  Explicit transfers (``jnp.asarray``,
+  ``jax.device_put``, ``jax.device_get``) stay legal.  The decorator also
+  marks the function for the R003 lint (:mod:`repro.analysis.lint`).
+* :func:`poison_donated` — after ``donate_argnums`` hands an
+  ``UpdateBuffer``'s leaves to XLA, touching the buffer again fails deep in
+  XLA with an unhelpful "buffer donated" error.  Poisoning swaps the
+  object's class so any leaf access raises :class:`UseAfterDonateError`
+  naming the donation site.  Probe with ``__simdc_donated__`` (class attr)
+  without touching the leaves.
+* :class:`SegmentLeakError` — ``FleetWorkerPool.close()`` raises it when a
+  shared-memory segment cannot unmap because an exported numpy view
+  outlived its ``UpdateBuffer`` (the documented lifetime rule in
+  ``runtime/workers``).
+* :class:`ClockMonotonicityError` — ``VirtualClock.schedule`` normally
+  clamps past timestamps to ``now``; under sanitize it raises, because a
+  past timestamp means some component computed an event time from stale
+  state.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import os
+
+__all__ = [
+    "enabled", "force", "override", "hot_path", "exempt",
+    "SanitizerError", "UseAfterDonateError", "SegmentLeakError",
+    "ClockMonotonicityError", "poison_donated",
+]
+
+_ENV = "SIMDC_SANITIZE"
+_FORCED: bool | None = None
+
+
+def enabled() -> bool:
+    """True when sanitizers are active (env var or :func:`force`)."""
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get(_ENV, "").strip().lower() not in (
+        "", "0", "false", "off", "no")
+
+
+def force(value: bool | None) -> None:
+    """Override the env var (``None`` restores env-driven behavior)."""
+    global _FORCED
+    _FORCED = value
+
+
+@contextlib.contextmanager
+def override(value: bool):
+    """Temporarily force sanitizers on/off (tests)."""
+    prev = _FORCED
+    force(value)
+    try:
+        yield
+    finally:
+        force(prev)
+
+
+class SanitizerError(RuntimeError):
+    """Base class for every simcheck runtime sanitizer failure."""
+
+
+class UseAfterDonateError(SanitizerError):
+    """A donated ``UpdateBuffer``'s leaves were accessed after donation."""
+
+
+class SegmentLeakError(SanitizerError):
+    """A worker-pool shared-memory segment outlived pool teardown."""
+
+
+class ClockMonotonicityError(SanitizerError):
+    """An event was scheduled in the virtual past."""
+
+
+def hot_path(fn):
+    """Mark ``fn`` as a dispatch hot path (lint rule R003) and, when
+    sanitizers are enabled, run it under ``jax.transfer_guard("disallow")``
+    so implicit host<->device transfers raise at the offending op."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if not enabled():
+            return fn(*args, **kwargs)
+        import jax
+        with jax.transfer_guard("disallow"):
+            return fn(*args, **kwargs)
+
+    wrapper.__simdc_hot_path__ = True
+    return wrapper
+
+
+def exempt(fn):
+    """Wrap a *user* callback (payload transforms, custom hooks) so it runs
+    outside the hot-path transfer guard: extension points may legitimately
+    convert between host and device, and only platform code is held to the
+    implicit-transfer-free invariant.  ``None`` passes through."""
+    if fn is None:
+        return None
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if not enabled():
+            return fn(*args, **kwargs)
+        import jax
+        with jax.transfer_guard("allow"):
+            return fn(*args, **kwargs)
+
+    return wrapper
+
+
+# --------------------------------------------------------------------------
+# use-after-donate poisoning
+
+_POISONED: dict[type, type] = {}
+
+
+def _poisoned_class(cls: type) -> type:
+    def _dead(self, *_args, **_kwargs):
+        raise UseAfterDonateError(
+            f"{cls.__name__} was donated to a jit (its 2-D leaves are dead "
+            "XLA buffers); rebuild the buffer from the jit outputs instead "
+            "of reusing the donated object")
+
+    # An empty-__slots__ subclass keeps the instance layout identical, so
+    # __class__ assignment is legal; the property shadows the parent's
+    # leaves2d slot descriptor, so every leaf access (materialize,
+    # state_dict, handle, ...) raises at the attribute read.
+    return type(f"_Donated{cls.__name__}", (cls,), {
+        "__slots__": (),
+        "__simdc_donated__": True,
+        "leaves2d": property(_dead, _dead, _dead),
+    })
+
+
+def poison_donated(buf):
+    """Swap ``buf``'s class so leaf access raises UseAfterDonateError.
+
+    Idempotent; returns ``buf``.  Only called on the zero-copy recycle path
+    when :func:`enabled`, so production runs never pay for it.
+    """
+    cls = type(buf)
+    if getattr(cls, "__simdc_donated__", False):
+        return buf
+    poisoned = _POISONED.get(cls)
+    if poisoned is None:
+        poisoned = _POISONED[cls] = _poisoned_class(cls)
+    buf.__class__ = poisoned
+    return buf

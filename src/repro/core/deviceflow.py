@@ -50,6 +50,7 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from repro.analysis import sanitizers
 from repro.core.strategies import (
     AccumulatedStrategy,
     DispatchStrategy,
@@ -673,6 +674,13 @@ class VirtualClock:
 
     def schedule(self, t: float, fn: Callable[[], None]) -> None:
         if t < self.now - 1e-12:
+            # A past timestamp means some component computed an event time
+            # from stale state; clamping keeps production runs monotone,
+            # the sanitizer makes the stale computation fail loudly.
+            if sanitizers.enabled():
+                raise sanitizers.ClockMonotonicityError(
+                    f"schedule at t={t!r} is in the virtual past "
+                    f"(now={self.now!r})")
             t = self.now
         heapq.heappush(self._heap, (t, next(self._tie), fn))
 

@@ -372,6 +372,7 @@ class DeviceFleet:
                 "— restored streams would diverge")
         self.device_ids = ids.copy()
         self._counters = counters.copy()
+        self.jitter = float(d.get("jitter", self.jitter))
         if len(ids):
             self._first_id = int(ids[0])
 

@@ -57,6 +57,13 @@ from repro.kernels.fed_reduce.ops import fed_reduce
 Params = Any  # pytree
 
 
+def _dev_f32(v) -> jax.Array:
+    """Explicit device_put of a host f32 scalar.  A bare ``jnp.float32``/
+    numpy scalar reaching a jit is an *implicit* h2d transfer and trips the
+    hot-path ``transfer_guard("disallow")`` (analysis.sanitizers)."""
+    return jax.device_put(np.float32(v))
+
+
 def weighted_average(updates: list[Params], weights: list[float]) -> Params:
     """FedAvg: ``sum_k p_k w_k`` with ``p_k`` normalized weights."""
     if not updates:
@@ -120,7 +127,8 @@ def _fused_reduce_apply(global_params: Params, buf_leaves: tuple,
 _FUSED_REDUCE_APPLY = jax.jit(
     _fused_reduce_apply, static_argnames=("impl", "mesh"))
 _FUSED_REDUCE_APPLY_DONATED = jax.jit(
-    _fused_reduce_apply, static_argnames=("impl", "mesh"), donate_argnums=(0,))
+    _fused_reduce_apply, static_argnames=("impl", "mesh"),
+    donate_argnums=(0,), keep_unused=True)
 
 
 def _partial_reduce(buf_leaves: tuple, buf_scales, wvec: jax.Array,
@@ -151,7 +159,8 @@ def _apply_weighted_sum(global_params: Params, sum_leaves: tuple,
 
 
 _APPLY_WEIGHTED_SUM = jax.jit(_apply_weighted_sum)
-_APPLY_WEIGHTED_SUM_DONATED = jax.jit(_apply_weighted_sum, donate_argnums=(0,))
+_APPLY_WEIGHTED_SUM_DONATED = jax.jit(
+    _apply_weighted_sum, donate_argnums=(0,), keep_unused=True)
 
 
 @dataclasses.dataclass
@@ -167,6 +176,11 @@ class _StreamChunk:
     def alive(self) -> bool:
         """False once the buffer's arrays were invalidated (e.g. donated by
         ``HybridSimulation(recycle_buffers=True)`` into a later round)."""
+        if getattr(type(self.buffer), "__simdc_donated__", False):
+            # Sanitizer-poisoned buffer (analysis.sanitizers.poison_donated):
+            # leaf access would raise UseAfterDonateError, and by definition
+            # a donated buffer is dead.  Probe the class marker instead.
+            return False
         return not any(
             getattr(leaf, "is_deleted", lambda: False)()
             for leaf in self.buffer.leaves2d)
@@ -257,7 +271,7 @@ def _fused_fedavg_delta_validated(global_params, handles, weights, *,
     wvecs = tuple(jnp.asarray(wvec) for _, wvec in groups.values())
     apply = _FUSED_REDUCE_APPLY_DONATED if donate else _FUSED_REDUCE_APPLY
     return apply(global_params, buf_leaves, buf_scales, wvecs,
-                 jnp.float32(1.0 / total), jnp.float32(server_lr), impl=impl,
+                 _dev_f32(1.0 / total), _dev_f32(server_lr), impl=impl,
                  mesh=mesh)
 
 
@@ -562,7 +576,7 @@ class AggregationService:
         apply = (_FUSED_REDUCE_APPLY_DONATED if self.donate_params
                  else _FUSED_REDUCE_APPLY)
         return apply(self.global_params, buf_leaves, buf_scales, wvecs,
-                     jnp.float32(1.0 / total), jnp.float32(self.server_lr),
+                     _dev_f32(1.0 / total), _dev_f32(self.server_lr),
                      impl=self.reduce_impl, mesh=self.mesh)
 
     def _aggregate_streaming(self, host_updates: list,
@@ -613,7 +627,7 @@ class AggregationService:
         apply = (_APPLY_WEIGHTED_SUM_DONATED if self.donate_params
                  else _APPLY_WEIGHTED_SUM)
         return apply(self.global_params, tuple(summed),
-                     jnp.float32(1.0 / total), jnp.float32(self.server_lr))
+                     _dev_f32(1.0 / total), _dev_f32(self.server_lr))
 
     # -- checkpointing -------------------------------------------------------
     def state_dict(self) -> dict:

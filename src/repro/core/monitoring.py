@@ -13,13 +13,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
-import time
 from typing import Any, Callable
 
 
 @dataclasses.dataclass(frozen=True)
 class MetricEvent:
-    t: float  # virtual or wall time
+    t: float  # virtual time (wall time only outside the simulation domain)
     source: str  # "logical" | "device" | "deviceflow" | "cloud" | "runner"
     task_id: int
     kind: str  # e.g. "round_start", "telemetry", "dispatch", "aggregation"
@@ -27,8 +26,25 @@ class MetricEvent:
 
 
 class MetricsBus:
-    def __init__(self) -> None:
+    """Metrics fan-out with an *injected* clock.
+
+    Simulation components must stamp events on the simulated timeline, so
+    the bus never reads wall time itself (simcheck R002): pass a zero-arg
+    ``clock`` callable, or build one from a ``VirtualClock`` with
+    :meth:`on_virtual_clock` (``MetricsBus.on_virtual_clock(engine.clock)``
+    when driven from ``TaskEngine``/``DeviceFlow``).  Explicitly wall-clock
+    producers (checkpoint manifests, dryrun timing) stamp their own ``t``
+    and go through :meth:`emit` directly.
+    """
+
+    def __init__(self, clock: Callable[[], float] | None = None) -> None:
         self._sinks: list[Callable[[MetricEvent], None]] = []
+        self.clock = clock
+
+    @classmethod
+    def on_virtual_clock(cls, clock) -> "MetricsBus":
+        """A bus stamping events from a ``VirtualClock`` (``clock.now``)."""
+        return cls(clock=lambda: clock.now)
 
     def subscribe(self, sink: Callable[[MetricEvent], None]) -> None:
         self._sinks.append(sink)
@@ -38,7 +54,13 @@ class MetricsBus:
             s(event)
 
     def emit_now(self, source: str, task_id: int, kind: str, **values) -> None:
-        self.emit(MetricEvent(time.time(), source, task_id, kind, values))
+        if self.clock is None:
+            raise RuntimeError(
+                "MetricsBus.emit_now needs an injected clock — construct "
+                "with MetricsBus(clock=...) or "
+                "MetricsBus.on_virtual_clock(engine.clock); simulation "
+                "metrics must not read wall time (simcheck R002)")
+        self.emit(MetricEvent(self.clock(), source, task_id, kind, values))
 
 
 class InMemorySink:

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizers import hot_path
 from repro.configs.base import ModelConfig
 from repro.distribution import ctx as shard_ctx
 from repro.kernels.decode_attention.ops import (
@@ -364,6 +365,12 @@ class ContinuousBatchingEngine:
                 lambda p, tok, act, ar: arena_decode(
                     p, tok, act, ar, cfg, attn_impl=attn_impl,
                     block_k=block_k))
+            # Jitted so the drop-mode sentinel is a traced constant; the
+            # eager .at[].set ships it as a runtime scalar, an implicit
+            # h2d that would trip the @hot_path transfer guard.
+            self._scatter_tok = jax.jit(
+                lambda tok, sids, first: tok.at[sids].set(
+                    first, mode="drop"))
         self.queue: collections.deque[RequestRecord] = collections.deque()
         self.records: list[RequestRecord] = []
         self.slot_owner: list[RequestRecord | None] = [None] * slots
@@ -393,9 +400,16 @@ class ContinuousBatchingEngine:
         return sum(o is not None for o in self.slot_owner)
 
     # -- one iteration -------------------------------------------------------
+    @hot_path
     def step(self, t: float) -> float:
         """Run one iteration starting at virtual time ``t``; returns its
-        duration (cost-model virtual seconds)."""
+        duration (cost-model virtual seconds).
+
+        ``@hot_path``: the decode loop must never host-sync per iteration —
+        token materialization is deferred to :meth:`_materialize_tokens`
+        (one sync for the whole run), and every h2d transfer here is an
+        explicit ``jnp.asarray``.
+        """
         admitted: list[RequestRecord] = []
         while self.queue and self._free:
             slot = heapq.heappop(self._free)
@@ -418,16 +432,20 @@ class ContinuousBatchingEngine:
                 sids_dev = jnp.asarray(sids)
                 first, self.arena = self._prefill(
                     self.params, jnp.asarray(toks), sids_dev, self.arena)
-                self._tok = self._tok.at[sids_dev].set(first, mode="drop")
+                self._tok = self._scatter_tok(self._tok, sids_dev, first)
                 self._events.append(("prefill", list(admitted), first))
         active = [o is not None for o in self.slot_owner]
         n_active = sum(active)
         if n_active:
             dur += self.cost.decode_s(n_active)
             if not self.simulate_only:
+                # Host-built bool mask, then one explicit dtype-preserving
+                # device_put (an eager dtype conversion would count as an
+                # implicit transfer under the guard).
+                act_host = np.fromiter(active, np.bool_, count=self.slots)
                 nxt, self.arena = self._decode(
                     self.params, self._tok,
-                    jnp.asarray(np.asarray(active)), self.arena)
+                    jnp.asarray(act_host), self.arena)
                 self._tok = nxt
                 self._events.append(("decode", list(self.slot_owner), nxt))
             end = t + dur

@@ -52,12 +52,15 @@ thin wrapper over the same per-grade execution helper.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizers
+from repro.analysis.sanitizers import hot_path
 from repro.core.allocation import AllocationResult
 from repro.core.deviceflow import ArrivalBatch, DeviceFlow, Message
 from repro.core.updates import (
@@ -108,6 +111,14 @@ def _shard_over_data(fn, mesh, data_axis: str, n_in: int, n_out: int):
         out_specs=(spec,) * n_out if n_out > 1 else spec,
         check_rep=False,
     )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _zeros_f32(n: int, sz: int) -> jax.Array:
+    # Jitted so the fill constant is baked into the compiled program: an
+    # eager ``jnp.zeros`` broadcasts a host scalar — an implicit h2d that
+    # trips the hot-path transfer guard (analysis.sanitizers).
+    return jnp.zeros((n, sz), jnp.float32)
 
 
 class _ZeroCopyCohortMixin:
@@ -173,8 +184,14 @@ class _ZeroCopyCohortMixin:
                 and recycle.dtypes == list(dtypes)):
             recycle = None  # layout changed: fall back to fresh allocation
         if recycle is not None:
+            donated_leaves = tuple(recycle.leaves2d)
+            if sanitizers.enabled():
+                # After this dispatch the retired buffer's leaves are dead
+                # XLA buffers; poison the object so any late access raises
+                # UseAfterDonateError instead of failing deep in XLA.
+                sanitizers.poison_donated(recycle)
             leaves2d, metrics = self._compiled_zc_recycle(
-                tuple(recycle.leaves2d), global_params, batches, rngs)
+                donated_leaves, global_params, batches, rngs)
         else:
             leaves2d, metrics = compiled(global_params, batches, rngs)
         return UpdateBuffer(jax.tree.leaves(leaves2d), *spec), metrics
@@ -233,8 +250,7 @@ class _ZeroCopyCohortMixin:
                     len(residual) == len(sizes)
                     and all(tuple(r.shape) == (n, sz)
                             for r, sz in zip(residual, sizes))):
-                residual = tuple(jnp.zeros((n, sz), jnp.float32)
-                                 for sz in sizes)
+                residual = tuple(_zeros_f32(n, sz) for sz in sizes)
         else:
             residual = None
         q, s, res, metrics = compiled(global_params, batches, rngs, residual)
@@ -743,6 +759,7 @@ class HybridSimulation:
         self.close()
 
     # -- shared per-grade execution ----------------------------------------
+    @hot_path
     def _run_split(
         self,
         tier: DeviceTier,
@@ -774,8 +791,21 @@ class HybridSimulation:
         n_total = int(jax.tree.leaves(client_batches)[0].shape[0])
         if not 0 <= num_logical <= n_total:
             raise ValueError("num_logical out of range")
-        take = lambda tree, sl: jax.tree.map(lambda x: x[sl], tree)
+
+        def take(tree, lo, hi):
+            # Static-bound slice for device leaves: eager ``x[lo:hi]``
+            # dispatches a dynamic_slice whose start index ships to device
+            # as a runtime scalar — an implicit h2d that trips the
+            # @hot_path transfer guard.  ``lax.slice_in_dim`` bakes the
+            # bounds into the compiled op instead.
+            return jax.tree.map(
+                lambda x: jax.lax.slice_in_dim(x, lo, hi)
+                if isinstance(x, jax.Array) else x[lo:hi], tree)
         emissions: "list[Message | ArrivalBatch]" = []
+        # User extension point: transforms may legitimately move data
+        # between host and device, so they run outside the hot-path
+        # transfer guard (no-op wrapper when sanitizers are off).
+        transform = sanitizers.exempt(self.payload_transform)
         mat_set = set(materialize_rows)
         columnar = self.columnar and self.zero_copy
         bench_pos: dict[int, int] = {}  # grade-local row -> emission index
@@ -851,10 +881,10 @@ class HybridSimulation:
             # partial while the next chunk's cohort is still computing.  The
             # q_i benchmarking rows are held back until materialization.
             held = set(bench_pos.values()) if columnar else mat_set
-            if self.payload_transform is not None:
+            if transform is not None:
                 for i in range(n_before, len(emissions)):
                     if i not in held:
-                        emissions[i] = self.payload_transform(emissions[i])
+                        emissions[i] = transform(emissions[i])
             fresh = [e for i, e in enumerate(emissions[n_before:],
                                              start=n_before)
                      if i not in held]
@@ -868,7 +898,11 @@ class HybridSimulation:
         def run_chunk(sim_tier, lo, hi, sub):
             # Same per-device rng derivation in both modes (run_cohort splits
             # the chunk key identically), so zero_copy is numerics-preserving.
-            chunk = take(client_batches, slice(lo, hi))
+            # The h2d transfer of the chunk's batch is EXPLICIT (jnp.asarray;
+            # free for already-device leaves): _run_split is a @hot_path, so
+            # a numpy leaf reaching the cohort jit directly would be an
+            # implicit transfer and trip transfer_guard("disallow").
+            chunk = jax.tree.map(jnp.asarray, take(client_batches, lo, hi))
             rngs = jax.random.split(sub, hi - lo)
             if self.zero_copy and self.wire == "int8":
                 # Quantized wire: the chunk quantizes inside the cohort jit
@@ -950,7 +984,8 @@ class HybridSimulation:
                     global_params, abstract,
                     jax.ShapeDtypeStruct((hi - lo, 2), np.uint32))
             wchunks = [
-                ChunkSpec(i, kind, lo, hi, np.asarray(sub),
+                ChunkSpec(i, kind, lo, hi,
+                          np.asarray(sub),  # simcheck: ok[R003] key -> worker
                           id_offset=id_offset)
                 for i, (_, kind, lo, hi, sub) in enumerate(chunk_plan)]
 
@@ -989,15 +1024,15 @@ class HybridSimulation:
             if isinstance(m.payload, UpdateHandle):
                 emissions[i] = dataclasses.replace(
                     m, payload=m.payload.materialize())
-        if self.payload_transform is not None:
+        if transform is not None:
             if stream:
                 # Streamed chunks transformed at submit time; only the
                 # held-back benchmarking rows remain.
                 for r in mat_set:
                     i = bench_pos.get(r, r)
-                    emissions[i] = self.payload_transform(emissions[i])
+                    emissions[i] = transform(emissions[i])
             else:
-                emissions = [self.payload_transform(e) for e in emissions]
+                emissions = [transform(e) for e in emissions]
         if stream and mat_set:
             self.deviceflow.submit_many(
                 [emissions[bench_pos.get(r, r)] for r in sorted(mat_set)])

@@ -233,13 +233,23 @@ class UpdateBuffer:
         recycled when the buffer is dropped."""
         if not 0 <= row < self.num_rows:
             raise IndexError(f"row {row} out of range [0, {self.num_rows})")
+        # Static-bound row extraction for device leaves: eager ``leaf[row]``
+        # ships the index to device as a runtime scalar — an implicit h2d
+        # that trips the hot-path transfer guard.  ``index_in_dim`` bakes
+        # the row into the compiled gather; np.asarray is an explicit d2h.
+        def _row(arr):
+            if isinstance(arr, jax.Array):
+                return np.asarray(
+                    jax.lax.index_in_dim(arr, row, keepdims=False))
+            return arr[row]
+
         out = []
         for k, (leaf, shape, dt) in enumerate(
                 zip(self.leaves2d, self.shapes, self.dtypes)):
-            r = np.asarray(leaf[row])
+            r = np.asarray(_row(leaf))
             if self.wire == "int8":
                 r = r.astype(np.float32) * np.float32(
-                    np.asarray(self.scales[k][row]))
+                    np.asarray(_row(self.scales[k])))
             elif isinstance(leaf, np.ndarray):
                 r = r.copy()
             out.append(r.reshape(shape).astype(dt, copy=False))

@@ -38,9 +38,11 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis.sanitizers import hot_path
 from repro.kernels.fed_reduce.fed_reduce import fed_reduce_pallas
 from repro.kernels.fed_reduce.ref import fed_reduce_ref
 
@@ -122,6 +124,7 @@ def _fed_reduce_local(stack: jax.Array, weights: jax.Array,
     raise ValueError(f"unknown impl {impl!r}")
 
 
+@hot_path
 def fed_reduce(stack: jax.Array, weights: jax.Array, *,
                scales: jax.Array | None = None,
                impl: str = "auto", mesh=None,
@@ -139,6 +142,13 @@ def fed_reduce(stack: jax.Array, weights: jax.Array, *,
     row reduction across fleet shards; ``None`` keeps the single-device
     path.
     """
+    # Explicit h2d up front: callers may hand numpy stacks (tests, host
+    # emission paths), and the reduction must stay implicit-transfer-free
+    # under transfer_guard("disallow").
+    stack = jnp.asarray(stack)
+    weights = jnp.asarray(weights)
+    if scales is not None:
+        scales = jnp.asarray(scales)
     if stack.ndim < 1 or stack.shape[0] != weights.shape[0]:
         raise ValueError(
             f"stack rows {stack.shape} must match weights {weights.shape}")
@@ -159,12 +169,21 @@ def fed_reduce(stack: jax.Array, weights: jax.Array, *,
     n = int(stack.shape[0])
     pad = (-n) % shards
     if pad:
-        # Zero-weight rows contribute exactly 0 to the weighted sum.
+        # Zero-weight rows contribute exactly 0 to the weighted sum.  The
+        # pad rows are built on host and device_put explicitly: an eager
+        # jnp.zeros broadcasts a host scalar, an implicit transfer under
+        # the @hot_path guard.
         stack = jnp.concatenate(
-            [stack, jnp.zeros((pad,) + stack.shape[1:], stack.dtype)])
+            [stack,
+             jnp.asarray(np.zeros((pad,) + stack.shape[1:], stack.dtype))])
         weights = jnp.concatenate(
-            [weights, jnp.zeros((pad,), weights.dtype)])
+            [weights, jnp.asarray(np.zeros((pad,), weights.dtype))])
     row_spec = P(axis, *([None] * (stack.ndim - 1)))
+    # Shard the operands onto the mesh EXPLICITLY: letting shard_map
+    # reshard a single-device operand is an implicit transfer and trips
+    # the @hot_path transfer guard.
+    stack = jax.device_put(stack, NamedSharding(mesh, row_spec))
+    weights = jax.device_put(weights, NamedSharding(mesh, P(axis)))
 
     def _shard_reduce(s, w):
         return jax.lax.psum(_fed_reduce_local(s, w, impl), axis)

@@ -72,7 +72,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     with lmesh.mesh:
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
-                         donate_argnums=donate)
+                         donate_argnums=donate, keep_unused=True)
         t1 = time.time()
         lowered = jitted.lower(*in_specs)
         t_lower = time.time() - t1

@@ -108,7 +108,7 @@ def cloud_training(args) -> dict:
 
     with lmesh.mesh:
         jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
-                         donate_argnums=(0,))
+                         donate_argnums=(0,), keep_unused=True)
         state = init_train_state(cfg, seed=args.seed)
         pipe = TokenPipeline(cfg.vocab_size, shape.seq_len,
                              shape.global_batch, seed=args.seed)

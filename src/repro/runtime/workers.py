@@ -72,6 +72,7 @@ from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.analysis import sanitizers
 from repro.runtime.fault_tolerance import redispatch_chunks
 
 _ALIGN = 64  # segment field alignment (cache line; numpy view friendly)
@@ -459,6 +460,15 @@ class FleetWorkerPool:
             except FileNotFoundError:
                 pass
         self._drain_closes()
+        if sanitizers.enabled() and self._to_close:
+            # A segment that cannot unmap at teardown means an exported
+            # numpy view outlived its UpdateBuffer — the lifetime rule in
+            # this module's docstring.  Unlinked above, so /dev/shm is
+            # clean; the mapping itself leaks until the view dies.
+            names = sorted(shm.name for shm in self._to_close)
+            raise sanitizers.SegmentLeakError(
+                f"{len(names)} shared-memory segment(s) still pinned at "
+                f"pool teardown (views outlived their buffers): {names}")
 
     def __enter__(self) -> "FleetWorkerPool":
         self.start()

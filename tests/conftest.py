@@ -7,6 +7,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.dirname(__file__))
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="enable the simcheck runtime sanitizers (sets SIMDC_SANITIZE=1 "
+             "before any repro module imports jax)")
+
+
+def pytest_configure(config):
+    if config.getoption("--sanitize"):
+        os.environ["SIMDC_SANITIZE"] = "1"
+
+
 try:  # real hypothesis when installed (CI: pip install -e ".[test]")
     import hypothesis  # noqa: F401
 except ImportError:  # hermetic containers: seeded-random fallback

@@ -1,0 +1,4 @@
+"""R001 fixture: donated jit without keep_unused — donation can no-op."""
+import jax
+
+step = jax.jit(lambda state, batch: state, donate_argnums=(0,))

@@ -1,0 +1,11 @@
+"""R003 fixture: host syncs inside a @hot_path function."""
+import numpy as np
+
+from repro.analysis.sanitizers import hot_path
+
+
+@hot_path
+def decode_loop(tok):
+    val = int(tok[0])
+    host = np.asarray(tok)
+    return val, host

@@ -1,0 +1,9 @@
+"""R004 fixture: state_dict writes a key restore never consumes."""
+
+
+class Engine:
+    def state_dict(self):
+        return {"step": self.step, "rng": self.rng}
+
+    def load_state_dict(self, d):
+        self.step = d["step"]

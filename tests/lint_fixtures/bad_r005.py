@@ -1,0 +1,8 @@
+"""R005 fixture: leaked shared-memory segment + resource_tracker bypass."""
+from multiprocessing import resource_tracker, shared_memory
+
+
+def leak_segment(nbytes):
+    shm = shared_memory.SharedMemory(create=True, size=nbytes)
+    resource_tracker.unregister(shm._name, "shared_memory")
+    return shm.buf

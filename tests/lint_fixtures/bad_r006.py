@@ -1,0 +1,11 @@
+"""R006 fixture: 3-D reshape on a reduction operand inside a cohort jit."""
+import jax
+import jax.numpy as jnp
+
+
+def cohort_reduce(stack, weights):
+    operands = stack.reshape(4, 8, -1)
+    return jnp.tensordot(weights, operands, axes=1)
+
+
+cohort_reduce_jit = jax.jit(cohort_reduce)

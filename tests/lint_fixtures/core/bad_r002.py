@@ -1,0 +1,6 @@
+"""R002 fixture: wall-clock in a simulation-domain (core/) module."""
+import time
+
+
+def emit_now():
+    return time.time()

@@ -1,0 +1,283 @@
+"""simcheck: lint rules (fixture corpus + clean tree) and runtime sanitizers.
+
+The fixture corpus under ``tests/lint_fixtures/`` holds one deliberately-bad
+snippet per rule; it is excluded from the default walk (``EXCLUDE_DIRS``),
+so these tests lint the files explicitly and assert each rule fires at the
+expected line.  The clean-tree test is the other half of the contract: after
+this PR's fixes, ``lint src tests`` over the real tree reports nothing.
+"""
+import os
+import pathlib
+from multiprocessing import shared_memory
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import lint, sanitizers
+from repro.core import federation
+from repro.core.deviceflow import VirtualClock
+from repro.core.monitoring import InMemorySink, MetricsBus
+from repro.core.updates import UpdateBuffer
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "lint_fixtures"
+
+
+# --------------------------------------------------------------------------
+# lint: every rule proven live by a firing fixture
+
+
+FIXTURE_EXPECTATIONS = [
+    ("bad_r001.py", "R001", {4}),
+    (os.path.join("core", "bad_r002.py"), "R002", {6}),
+    ("bad_r003.py", "R003", {9, 10}),
+    ("bad_r004.py", "R004", {6}),
+    ("bad_r005.py", "R005", {6, 7}),
+    ("bad_r006.py", "R006", {7}),
+]
+
+
+@pytest.mark.parametrize("rel,rule,lines", FIXTURE_EXPECTATIONS,
+                         ids=[rule for _, rule, _ in FIXTURE_EXPECTATIONS])
+def test_fixture_fires_rule_at_expected_lines(rel, rule, lines):
+    path = FIXTURES / rel
+    findings = lint.lint_file(path)
+    assert findings, f"{rel} produced no findings"
+    assert {f.rule for f in findings} == {rule}
+    assert {f.line for f in findings} == lines
+    for f in findings:
+        assert str(f).startswith(f"{path}:{f.line}: {rule} ")
+
+
+def test_fixture_corpus_is_excluded_from_directory_walks():
+    findings = lint.lint_paths([str(REPO / "tests")])
+    assert not any("lint_fixtures" in f.path for f in findings)
+
+
+def test_clean_tree_lints_clean():
+    findings = lint.lint_paths([str(REPO / "src"), str(REPO / "tests")])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_exit_codes(capsys):
+    assert lint.main([str(REPO / "src"), str(REPO / "tests")]) == 0
+    assert "simcheck: clean" in capsys.readouterr().out
+    assert lint.main([str(FIXTURES / "bad_r001.py")]) == 1
+    out = capsys.readouterr().out
+    assert "R001" in out and "1 finding(s)" in out
+
+
+def test_cli_rule_subset():
+    # R001 fixture has no R005 problem: subsetting away R001 lints clean.
+    assert lint.main(["--rules", "R005",
+                      str(FIXTURES / "bad_r001.py")]) == 0
+
+
+def test_suppression_comments():
+    src = "import jax\nf = jax.jit(lambda s: s, donate_argnums=(0,))"
+    assert [f.rule for f in lint.lint_source(src)] == ["R001"]
+    assert lint.lint_source(src + "  # simcheck: ok") == []
+    assert lint.lint_source(src + "  # simcheck: ok[R001]") == []
+    # A suppression naming a different rule does not apply.
+    assert [f.rule for f in
+            lint.lint_source(src + "  # simcheck: ok[R003]")] == ["R001"]
+
+
+def test_shape_arithmetic_is_exempt_from_r003():
+    src = (
+        "from repro.analysis.sanitizers import hot_path\n"
+        "@hot_path\n"
+        "def f(x):\n"
+        "    n = int(x.shape[0])\n"        # shape math: fine
+        "    def emit(row):\n"
+        "        return float(row[0])\n"   # nested def: not scanned
+        "    return n\n"
+    )
+    assert lint.lint_source(src) == []
+
+
+# --------------------------------------------------------------------------
+# sanitizers: enable switch and transfer guard
+
+
+def test_override_controls_enabled():
+    with sanitizers.override(True):
+        assert sanitizers.enabled()
+        with sanitizers.override(False):
+            assert not sanitizers.enabled()
+        assert sanitizers.enabled()
+
+
+def test_hot_paths_are_marked():
+    from repro.core.serving import ContinuousBatchingEngine
+    from repro.core.simulation import HybridSimulation
+    from repro.kernels.fed_reduce.ops import fed_reduce
+
+    assert ContinuousBatchingEngine.step.__simdc_hot_path__
+    assert HybridSimulation._run_split.__simdc_hot_path__
+    assert fed_reduce.__simdc_hot_path__
+
+
+def test_hot_path_guard_catches_implicit_transfer():
+    @sanitizers.hot_path
+    def dispatch(x):
+        return jax.jit(lambda y: y + 1)(x)
+
+    host = np.ones((4,), np.float32)
+    with sanitizers.override(False):
+        np.testing.assert_allclose(np.asarray(dispatch(host)), 2.0)
+    with sanitizers.override(True):
+        with pytest.raises(Exception, match="[Tt]ransfer"):
+            dispatch(host)
+        # Explicitly-placed operands stay legal under the guard.
+        dev = jax.device_put(host)
+        np.testing.assert_allclose(np.asarray(dispatch(dev)), 2.0)
+
+
+def test_exempt_lets_user_callbacks_transfer():
+    def user_transform(rows):
+        return jnp.asarray(rows, jnp.float32)  # implicit under "disallow"
+
+    @sanitizers.hot_path
+    def with_exempt(rows):
+        return sanitizers.exempt(user_transform)(rows)
+
+    @sanitizers.hot_path
+    def without_exempt(rows):
+        return user_transform(rows)
+
+    with sanitizers.override(True):
+        out = with_exempt([1.0, 2.0])
+        np.testing.assert_allclose(np.asarray(out), [1.0, 2.0])
+        with pytest.raises(Exception, match="[Tt]ransfer"):
+            without_exempt([1.0, 2.0])
+    assert sanitizers.exempt(None) is None
+
+
+# --------------------------------------------------------------------------
+# sanitizers: use-after-donate poisoning
+
+
+def _small_buffer():
+    return UpdateBuffer.from_stacked(
+        {"w": jnp.ones((3, 2, 2), jnp.float32)})
+
+
+def test_poison_donated_buffer_raises_on_leaf_access():
+    buf = _small_buffer()
+    sanitizers.poison_donated(buf)
+    assert type(buf).__simdc_donated__
+    assert isinstance(buf, UpdateBuffer)  # still the same nominal type
+    with pytest.raises(sanitizers.UseAfterDonateError):
+        buf.leaves2d
+    with pytest.raises(sanitizers.UseAfterDonateError):
+        buf.materialize_row(0)
+    # Layout metadata stays readable — only the dead leaves are fenced.
+    assert buf.num_rows == 3
+    assert buf.row_nbytes == 16
+
+
+def test_poison_donated_is_idempotent_and_caches_classes():
+    a, b = _small_buffer(), _small_buffer()
+    sanitizers.poison_donated(a)
+    cls = type(a)
+    sanitizers.poison_donated(a)
+    sanitizers.poison_donated(b)
+    assert type(a) is cls and type(b) is cls
+
+
+def test_donated_apply_invalidates_old_param_buffers():
+    # Regression for the R001 fixes: the donated server-update jits carry
+    # keep_unused=True, so donation genuinely consumes the old round's
+    # global-params buffer instead of silently no-opping.
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    old_leaf = params["w"]
+    new = federation._APPLY_WEIGHTED_SUM_DONATED(
+        params, (jnp.full((4,), 2.0, jnp.float32),),
+        jax.device_put(np.float32(0.5)), jax.device_put(np.float32(1.0)))
+    assert old_leaf.is_deleted()
+    # w <- w + lr * (sum * inv_total - w) = 1 + (2*0.5 - 1) = 1
+    np.testing.assert_allclose(np.asarray(new["w"]), 1.0)
+
+
+# --------------------------------------------------------------------------
+# sanitizers: segment-leak audit and clock monotonicity
+
+
+def test_segment_leak_audit_fires_at_pool_teardown():
+    from repro.runtime.workers import FleetWorkerPool
+
+    pool = FleetWorkerPool.__new__(FleetWorkerPool)
+    pool._closed = False
+    pool._workers = []
+    pool._segments = {}
+    pool._dead_owner_names = set()
+    shm = shared_memory.SharedMemory(create=True, size=64)
+    view = np.frombuffer(shm.buf, np.uint8)  # pins the mapping
+    pool._to_close = [shm]
+    try:
+        with sanitizers.override(True):
+            with pytest.raises(sanitizers.SegmentLeakError, match=shm.name):
+                pool.close()
+    finally:
+        del view
+        pool._drain_closes()
+        shm.unlink()
+    assert pool._to_close == []
+
+
+def test_segment_leak_audit_silent_when_disabled():
+    from repro.runtime.workers import FleetWorkerPool
+
+    pool = FleetWorkerPool.__new__(FleetWorkerPool)
+    pool._closed = False
+    pool._workers = []
+    pool._segments = {}
+    pool._dead_owner_names = set()
+    shm = shared_memory.SharedMemory(create=True, size=64)
+    view = np.frombuffer(shm.buf, np.uint8)
+    pool._to_close = [shm]
+    try:
+        with sanitizers.override(False):
+            pool.close()  # leak tolerated (view may legitimately outlive)
+        assert pool._to_close == [shm]
+    finally:
+        del view
+        pool._drain_closes()
+        shm.unlink()
+
+
+def test_virtual_clock_past_schedule():
+    clock = VirtualClock()
+    clock.run_until(5.0)
+    with sanitizers.override(True):
+        with pytest.raises(sanitizers.ClockMonotonicityError):
+            clock.schedule(1.0, lambda: None)
+    with sanitizers.override(False):
+        clock.schedule(1.0, lambda: None)  # clamped, not raised
+    assert clock.next_time() == 5.0
+
+
+# --------------------------------------------------------------------------
+# R002 satellite: MetricsBus clock injection
+
+
+def test_metrics_bus_requires_injected_clock_for_emit_now():
+    bus = MetricsBus()
+    with pytest.raises(RuntimeError, match="R002"):
+        bus.emit_now("cloud", 1, "round_start")
+
+
+def test_metrics_bus_stamps_virtual_time():
+    clock = VirtualClock()
+    clock.run_until(3.5)
+    bus = MetricsBus.on_virtual_clock(clock)
+    sink = InMemorySink()
+    bus.subscribe(sink)
+    bus.emit_now("cloud", 7, "aggregation", applied=4)
+    ev = sink.latest(7, "aggregation")
+    assert ev is not None
+    assert ev.t == 3.5
+    assert ev.values == {"applied": 4}
